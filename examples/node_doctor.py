@@ -1,0 +1,55 @@
+"""The paper's technique as cluster ops tooling: MalStone-B + CUSUM over
+step telemetry attributes a degrading host (paper §8's change-detection
+remark, Table 1's "site = the thing that marks").
+
+    PYTHONPATH=src python examples/node_doctor.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import SECONDS_PER_WEEK
+from repro.core.nodedoctor import diagnose, host_telemetry_log
+
+
+def main():
+    rng = np.random.default_rng(0)
+    hosts, buckets, steps_per = 16, 24, 40
+    bad_host, degrade_after = 11, 12
+
+    host, step, bucket, failed = [], [], [], []
+    sid = 0
+    for b in range(buckets):
+        for h in range(hosts):
+            for _ in range(steps_per):
+                p = 0.01
+                if h == bad_host and b >= degrade_after:
+                    p = 0.30  # slow memory fault: 30% step failure
+                host.append(h)
+                step.append(sid)
+                bucket.append(b * SECONDS_PER_WEEK)
+                failed.append(int(rng.random() < p))
+                sid += 1
+
+    log = host_telemetry_log(jnp.asarray(host), jnp.asarray(step),
+                             jnp.asarray(bucket), jnp.asarray(failed))
+    rep = diagnose(log, num_hosts=hosts, num_buckets=buckets)
+
+    print(f"{sid} steps across {hosts} hosts; host {bad_host} degrades at "
+          f"bucket {degrade_after}\n")
+    print("host  rho_final  cusum_max  alarm")
+    rho = np.asarray(rep.rho)[:, -1]
+    cmax = np.asarray(rep.cusum).max(-1)
+    alarm = np.asarray(rep.alarm)
+    for h in range(hosts):
+        flag = " <-- blocklist" if alarm[h] else ""
+        print(f"{h:>4}  {rho[h]:>9.3f}  {cmax[h]:>9.1f}  {alarm[h]}{flag}")
+
+    suspects = np.asarray(rep.suspect_rank)[:3]
+    print(f"\ntop suspects: {suspects.tolist()} "
+          f"(truth: {bad_host})")
+    assert alarm[bad_host] and alarm.sum() == 1
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver: train an LM on MalGen log data with the fault-tolerant
+runtime (checkpoints, retries, SPM node doctor).
+
+Default is a CPU-sized model so the example runs anywhere; ``--full`` trains
+a ~100M-param llama-style model for a few hundred steps (hours on CPU,
+minutes on accelerators).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 30] [--full]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.data import DataConfig, TokenPipeline
+from repro.malgen import MalGenConfig
+from repro.models import steps as S
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.runtime import TrainConfig, Trainer
+
+
+def small_config():
+    return ModelConfig(
+        name="malstone-lm-12m", family="dense", num_layers=4,
+        d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
+        vocab_size=256, layer_pattern=("attn",), mlp_pattern=("swiglu",))
+
+
+def full_config():
+    # ~100M params: 12L x 768 with byte vocab
+    return ModelConfig(
+        name="malstone-lm-100m", family="dense", num_layers=12,
+        d_model=768, num_heads=12, num_kv_heads=4, d_ff=3072,
+        vocab_size=256, layer_pattern=("attn",), mlp_pattern=("swiglu",))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = full_config() if args.full else small_config()
+    print(f"model: {cfg.name} ({cfg.num_params_total / 1e6:.1f}M params)")
+
+    data = DataConfig(source="malgen", vocab_size=cfg.vocab_size,
+                      seq_len=args.seq_len, global_batch=args.batch,
+                      malgen=MalGenConfig(num_sites=10_000,
+                                          num_entities=100_000))
+    pipe = TokenPipeline(data)
+
+    opt_cfg = AdamWConfig(lr=3e-4, weight_decay=0.01)
+    state, _ = S.make_train_state(jax.random.key(0), cfg, opt_cfg)
+    step_fn = jax.jit(S.make_train_step(cfg, opt_cfg, warmup_steps=10,
+                                        total_steps=args.steps))
+
+    tcfg = TrainConfig(total_steps=args.steps, ckpt_every=10,
+                       ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(tcfg, step_fn, state, pipe.batch_at)
+    report = trainer.run()
+
+    losses = [h["loss"] for h in report["history"]]
+    print(f"\ntrained {report['final_step']} steps on MalGen log bytes")
+    print(f"loss: first={losses[0]:.3f} last={losses[-1]:.3f} "
+          f"(restarts={report['restarts']}, retries={report['retries']})")
+    assert losses[-1] < losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, atomic publish,
+elastic reshard on restore.
+
+Layout (one directory per step)::
+
+    ckpt_dir/
+      step_000123/
+        manifest.json          # leaf names, shapes, dtypes, shard map
+        shard_000.npz          # leaf -> array chunk (leading-dim split)
+        shard_001.npz
+      step_000123.COMMITTED    # written LAST (atomic rename) — a crash
+                               # mid-write never yields a loadable step
+
+Elasticity: arrays are chunked along the leading dim across ``num_shards``
+writer processes; the restore path reassembles from ANY shard count, so a
+checkpoint written by 512 hosts restores onto 8 (or 1) — the elastic-rescale
+path the runtime tests exercise. Values are stored in the array's on-device
+dtype (bf16 stays bf16 via a uint16 view — npz has no native bf16).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import tree as tr
+
+_BF16 = "bfloat16"
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16 or str(x.dtype) == _BF16:
+        return np.asarray(jnp.asarray(x).view(jnp.uint16)), _BF16
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, dtype: str):
+    if dtype == _BF16:
+        return jnp.asarray(arr).view(jnp.bfloat16)
+    return jnp.asarray(arr)
+
+
+def save_checkpoint(ckpt_dir, step: int, state: Any,
+                    num_shards: int = 1) -> pathlib.Path:
+    """Write one step. ``state`` is any pytree of arrays."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix=f".tmp_step_{step}_",
+                                        dir=ckpt_dir))
+    leaves = tr.tree_flatten_with_paths(state)
+    manifest = {"step": step, "num_shards": num_shards, "leaves": []}
+    shards: list[dict] = [{} for _ in range(num_shards)]
+
+    for name, leaf in leaves:
+        arr, dtype = _to_numpy(leaf)
+        entry = {"name": name, "shape": list(arr.shape), "dtype": dtype,
+                 "splits": []}
+        if arr.ndim == 0 or arr.shape[0] < num_shards or num_shards == 1:
+            shards[0][name] = arr
+            entry["splits"] = [{"shard": 0, "rows": list(arr.shape[:1])}]
+        else:
+            chunks = np.array_split(arr, num_shards, axis=0)
+            for i, c in enumerate(chunks):
+                shards[i][name] = c
+                entry["splits"].append({"shard": i, "rows": [c.shape[0]]})
+        manifest["leaves"].append(entry)
+
+    for i, payload in enumerate(shards):
+        np.savez(tmp / f"shard_{i:03d}.npz", **payload)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # commit marker LAST: readers only trust committed steps
+    (ckpt_dir / f"step_{step:08d}.COMMITTED").touch()
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for marker in ckpt_dir.glob("step_*.COMMITTED"):
+        s = int(marker.stem.split("_")[1])
+        if (ckpt_dir / f"step_{s:08d}" / "manifest.json").exists():
+            steps.append(s)
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). Works regardless of the writer's shard count."""
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = {}
+    for i in range(manifest["num_shards"]):
+        f = d / f"shard_{i:03d}.npz"
+        if f.exists():
+            with np.load(f) as z:
+                for k in z.files:
+                    data.setdefault(k, []).append((i, z[k]))
+
+    by_name = {}
+    for entry in manifest["leaves"]:
+        parts = sorted(data.get(entry["name"], []), key=lambda t: t[0])
+        if not parts:
+            raise FileNotFoundError(f"leaf {entry['name']} missing")
+        if len(parts) == 1:
+            arr = parts[0][1]
+        else:
+            arr = np.concatenate([p[1] for p in parts], axis=0)
+        by_name[entry["name"]] = _from_numpy(arr, entry["dtype"])
+
+    names = [n for n, _ in tr.tree_flatten_with_paths(like)]
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    for name, ref in zip(names, flat_like):
+        arr = by_name[name]
+        assert tuple(arr.shape) == tuple(ref.shape), \
+            f"{name}: ckpt {arr.shape} vs expected {ref.shape}"
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Keep-last-N manager with restore-latest (the trainer's interface)."""
+
+    def __init__(self, ckpt_dir, keep: int = 3, num_shards: int = 1):
+        self.dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+        self.num_shards = num_shards
+
+    def save(self, step: int, state: Any):
+        save_checkpoint(self.dir, step, state, self.num_shards)
+        self._gc()
+
+    def restore_latest(self, like: Any):
+        s = latest_step(self.dir)
+        if s is None:
+            return None, None
+        return s, load_checkpoint(self.dir, s, like)
+
+    def _gc(self):
+        steps = sorted(
+            int(m.stem.split("_")[1])
+            for m in self.dir.glob("step_*.COMMITTED"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+            (self.dir / f"step_{s:08d}.COMMITTED").unlink(missing_ok=True)

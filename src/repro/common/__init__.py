@@ -1,0 +1,21 @@
+"""Shared substrate: array types, pytree helpers, numerics config."""
+
+from repro.common.types import (
+    EventLog,
+    SpmResult,
+    WindowSpec,
+    SECONDS_PER_WEEK,
+    SECONDS_PER_YEAR,
+    WEEKS_PER_YEAR,
+)
+from repro.common import tree
+
+__all__ = [
+    "EventLog",
+    "SpmResult",
+    "WindowSpec",
+    "SECONDS_PER_WEEK",
+    "SECONDS_PER_YEAR",
+    "WEEKS_PER_YEAR",
+    "tree",
+]

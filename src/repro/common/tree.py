@@ -1,0 +1,78 @@
+"""Small pytree utilities (no flax/optax in this environment)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_map(fn: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_count_params(tree: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(math.prod(x.shape)) for x in leaves)
+
+
+def tree_bytes(tree: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(math.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+
+
+def tree_global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree: PyTree, scale) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * scale, tree)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_any_nan(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.any(jnp.isnan(x)) for x in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.zeros((), bool)
+    return jnp.any(jnp.stack(leaves))
+
+
+def tree_flatten_with_paths(tree: PyTree):
+    """Yields (dotted_path, leaf) pairs; stable order for checkpointing."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)

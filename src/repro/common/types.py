@@ -1,0 +1,100 @@
+"""Core data types for the MalStone site-entity-mark model.
+
+The paper's log records are 100-byte fixed-width rows::
+
+    Event ID | Timestamp | Site ID | Entity ID | Mark
+
+On device we keep a struct-of-arrays (`EventLog`) so every column is a dense,
+shardable vector. Timestamps are int32 seconds since the start of the
+benchmark year (the paper generates exactly one year of data); week bucketing
+follows the paper's Reducer, which buckets "arbitrarily" but uses ISO-style
+week numbers — we use ``week = min(ts // SECONDS_PER_WEEK, 51)`` so a year
+maps onto exactly 52 buckets.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+SECONDS_PER_DAY = 86_400
+SECONDS_PER_WEEK = 7 * SECONDS_PER_DAY
+SECONDS_PER_YEAR = 365 * SECONDS_PER_DAY
+WEEKS_PER_YEAR = 52
+
+# Sentinel used for "entity never becomes marked".
+NEVER_MARKED = jnp.iinfo(jnp.int32).max
+
+
+class EventLog(NamedTuple):
+    """A batch of site-entity-mark events (struct of arrays).
+
+    All arrays share the leading record dimension. ``mark`` is the *joined*
+    mark flag of the paper's Section 4: 1 iff the entity was already marked at
+    the time of the visit (not "this visit marked the entity").
+
+    ``valid`` supports fixed-capacity buffers (the MapReduce backend's shuffle
+    buckets); invalid rows are ignored by every aggregation.
+    """
+
+    site_id: jnp.ndarray     # int32 [N]  dense site index in [0, num_sites)
+    entity_id: jnp.ndarray   # int32 [N]  dense entity index
+    timestamp: jnp.ndarray   # int32 [N]  seconds since year start
+    mark: jnp.ndarray        # int32 [N]  0/1 joined mark flag
+    event_seq: Optional[jnp.ndarray] = None  # uint32 [N] per-shard sequence
+    shard_hash: Optional[jnp.ndarray] = None  # uint32 [N] hash of origin shard
+    valid: Optional[jnp.ndarray] = None       # bool [N]; None means all valid
+
+    @property
+    def num_records(self) -> int:
+        return self.site_id.shape[0]
+
+    def valid_mask(self) -> jnp.ndarray:
+        if self.valid is None:
+            return jnp.ones(self.site_id.shape, dtype=bool)
+        return self.valid
+
+    def week(self, seconds_per_week: int = SECONDS_PER_WEEK,
+             num_weeks: int = WEEKS_PER_YEAR) -> jnp.ndarray:
+        """Paper Reducer's time bucketing: timestamps -> week index."""
+        w = self.timestamp // seconds_per_week
+        return jnp.clip(w, 0, num_weeks - 1).astype(jnp.int32)
+
+
+class WindowSpec(NamedTuple):
+    """Exposure + monitor window pair (paper Section 3.2, Figure 1).
+
+    Both windows are half-open ``[start, end)`` in seconds since year start.
+    MalStone A uses one pair covering the year; MalStone B uses a fixed
+    exposure window and a sequence of monitor windows sharing ``mon_start``
+    with growing ends (week 1, week 2, ..., week 52).
+    """
+
+    exp_start: int
+    exp_end: int
+    mon_start: int
+    mon_end: int
+
+    @staticmethod
+    def full_year() -> "WindowSpec":
+        return WindowSpec(0, SECONDS_PER_YEAR, 0, SECONDS_PER_YEAR)
+
+
+class SpmResult(NamedTuple):
+    """Output of a MalStone run.
+
+    ``rho`` is ``[num_sites]`` for MalStone A and ``[num_sites, num_weeks]``
+    for MalStone B. ``total``/``marked`` are the underlying counts with the
+    same shape (pre-division), which the benchmarks and tests introspect.
+    """
+
+    rho: jnp.ndarray
+    total: jnp.ndarray
+    marked: jnp.ndarray
+
+
+def safe_ratio(num: jnp.ndarray, den: jnp.ndarray) -> jnp.ndarray:
+    """``num/den`` with 0/0 -> 0, matching "no visits yet" semantics."""
+    den_f = den.astype(jnp.float32)
+    return jnp.where(den_f > 0, num.astype(jnp.float32) / jnp.maximum(den_f, 1.0), 0.0)

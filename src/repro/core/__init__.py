@@ -1,0 +1,39 @@
+"""The paper's primary contribution: the MalStone benchmark engine.
+
+- ``spm``      — the SPM statistic (rho_j, rho_{j,t}) and the dense
+                 site x week histogram primitive every backend shares.
+- ``backends`` — the three middleware dataflows of paper §6 as JAX
+                 collectives (streams / sphere / mapreduce).
+- ``runner``   — mesh-level MalStone A & B drivers (shard_map).
+- ``windows``  — exposure/monitor window algebra (paper §3).
+- ``nodedoctor`` — SPM applied to cluster telemetry (site=host,
+                 entity=step, mark=failure) for bad-node attribution.
+"""
+
+from repro.core.spm import (
+    site_week_histogram,
+    malstone_a,
+    malstone_b,
+    malstone_b_fixed_denominator,
+    malstone_a_from_log,
+    malstone_b_from_log,
+)
+from repro.core.runner import (
+    malstone_run,
+    malstone_run_partitioned,
+    malstone_single_device,
+    pad_log_to,
+)
+
+__all__ = [
+    "site_week_histogram",
+    "malstone_a",
+    "malstone_b",
+    "malstone_b_fixed_denominator",
+    "malstone_a_from_log",
+    "malstone_b_from_log",
+    "malstone_run",
+    "malstone_run_partitioned",
+    "malstone_single_device",
+    "pad_log_to",
+]

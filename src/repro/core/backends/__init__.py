@@ -1,0 +1,37 @@
+"""The three middleware dataflows of paper Section 6, re-expressed as
+JAX collectives over a device mesh.
+
+All three compute the identical ``site_week_histogram`` -> MalStone A/B
+finalization; they differ ONLY in how bytes move — which is exactly the
+paper's point (Tables 4/5 show a ~20x end-to-end spread for the same
+statistic):
+
+- ``streams``  (Hadoop Streams + Python analogue): one-pass local combine
+  into a dense histogram, then a single ``psum`` (all-reduce). Bytes moved
+  per link: O(num_sites * num_weeks), independent of record count.
+- ``sphere``   (Sector/Sphere UDF analogue): local combine then
+  ``psum_scatter`` — each device finalizes the site range it owns; no
+  re-broadcast. ~half the all-reduce bytes. The fastest, as in the paper.
+- ``mapreduce``(Hadoop MapReduce analogue): a true record shuffle — each
+  record is routed to the reducer that owns its site
+  (``site_id % num_reducers``, the paper's Partitioner) via ``all_to_all``,
+  then reduced. Bytes moved: O(records * record_bytes) — the slowest, as in
+  the paper.
+
+Every backend function is written to run INSIDE ``shard_map`` with the event
+log sharded over the record dimension on ``axis_name``.
+"""
+
+from repro.core.backends.streams import streams_histogram
+from repro.core.backends.sphere import sphere_histogram
+from repro.core.backends.mapreduce import mapreduce_histogram, shuffle_stats
+
+BACKENDS = ("streams", "sphere", "mapreduce")
+
+__all__ = [
+    "streams_histogram",
+    "sphere_histogram",
+    "mapreduce_histogram",
+    "shuffle_stats",
+    "BACKENDS",
+]

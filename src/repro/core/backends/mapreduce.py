@@ -1,0 +1,153 @@
+"""Hadoop-MapReduce-analogue backend: a true record shuffle.
+
+Paper Section 6.1: the Mapper emits ``(site_id, (timestamp, mark))``, the
+Partitioner routes by ``site_id % num_reducers``, and each Reducer aggregates
+the records for its sites. The defining cost is that *every record* crosses
+the network (plus, on 2010 Hadoop, spills to disk twice) — this is why
+MapReduce lost to Streams by ~5x and to Sphere by ~13-20x in Tables 4/5.
+
+TPU adaptation: the shuffle is a fixed-capacity bucketed ``lax.all_to_all``.
+TPU collectives need static shapes, so each device packs its records into
+``[P, capacity]`` buckets (dest = site_id % P, the paper's Partitioner);
+rare overflow beyond capacity is dropped and *counted* (``shuffle_stats``
+reports it; tests assert zero at sane capacity factors). After the exchange,
+device ``d`` holds every record whose ``site_id % P == d`` and reduces them
+with the same histogram primitive as the other backends.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import EventLog, WEEKS_PER_YEAR
+from repro.core.spm import site_week_histogram
+
+
+class ShuffleStats(NamedTuple):
+    sent: jnp.ndarray       # records successfully packed (this device)
+    overflow: jnp.ndarray   # records dropped due to bucket capacity
+    capacity: int           # per-destination bucket capacity
+
+
+def _pack_buckets(log: EventLog, num_partitions: int, capacity: int):
+    """Scatter records into a [P, C, fields] bucket buffer by site % P."""
+    n = log.num_records
+    dest = (log.site_id % num_partitions).astype(jnp.int32)
+    valid = log.valid_mask()
+    dest = jnp.where(valid, dest, num_partitions)  # invalid -> overflow row
+
+    # Stable position of each record within its destination bucket.
+    order = jnp.argsort(dest, stable=True)
+    dest_sorted = dest[order]
+    # start offset of each destination in the sorted order
+    starts = jnp.searchsorted(dest_sorted, jnp.arange(num_partitions + 1))
+    pos_sorted = jnp.arange(n) - starts[dest_sorted]
+    keep = (pos_sorted < capacity) & (dest_sorted < num_partitions)
+
+    bucket_row = jnp.where(keep, dest_sorted, num_partitions)
+    bucket_pos = jnp.where(keep, pos_sorted, 0)
+
+    def scatter(col, fill):
+        buf = jnp.full((num_partitions + 1, capacity), fill, col.dtype)
+        return buf.at[bucket_row, bucket_pos].set(col[order])[:num_partitions]
+
+    site = scatter(log.site_id, -1)
+    entity = scatter(log.entity_id, 0)
+    ts = scatter(log.timestamp, 0)
+    mark = scatter(log.mark, 0)
+    vmask = site >= 0
+
+    overflow = jnp.sum((~keep) & (dest_sorted < num_partitions))
+    sent = jnp.sum(keep)
+    return (site, entity, ts, mark, vmask), ShuffleStats(sent, overflow, capacity)
+
+
+def mapreduce_histogram(log: EventLog,
+                        num_sites: int,
+                        num_weeks: int = WEEKS_PER_YEAR,
+                        axis_name: str = "data",
+                        capacity_factor: float = 2.0,
+                        histogram_fn=site_week_histogram,
+                        ) -> tuple[jnp.ndarray, ShuffleStats]:
+    """Shuffle + reduce. Returns (owned histogram, shuffle stats).
+
+    Device ``d`` owns the strided site set ``{j : j % P == d}`` (paper's
+    Partitioner); the returned histogram is ``[num_sites // P, W, 2]`` with
+    local row ``i`` = global site ``i * P + d``. ``num_sites % P == 0``
+    required (runner pads).
+    """
+    p = jax.lax.axis_size(axis_name)
+    n = log.num_records
+    capacity = int(max(1, round(n / p * capacity_factor)))
+
+    (site, entity, ts, mark, vmask), stats = _pack_buckets(log, p, capacity)
+
+    # The shuffle: row i of every device's buffer goes to device i.
+    def exch(x):
+        return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                                  tiled=True)
+
+    site, entity, ts, mark = exch(site), exch(entity), exch(ts), exch(mark)
+    vmask = exch(vmask)
+
+    my = jax.lax.axis_index(axis_name)
+    shuffled = EventLog(
+        site_id=site.reshape(-1),
+        entity_id=entity.reshape(-1),
+        timestamp=ts.reshape(-1),
+        mark=mark.reshape(-1),
+        valid=vmask.reshape(-1),
+    )
+    # Re-base strided site ids to local dense rows: local = site // P. All
+    # received records satisfy site % P == my by construction; guard anyway.
+    ok = shuffled.valid & ((shuffled.site_id % p) == my)
+    local_rows = shuffled.site_id // p
+    rebased = shuffled._replace(site_id=local_rows, valid=ok)
+
+    hist = histogram_fn(rebased, num_sites // p, num_weeks)
+    return hist, stats
+
+
+def shuffle_stats(stats: ShuffleStats, axis_name: str = "data") -> ShuffleStats:
+    """Global shuffle accounting (psum over the mesh)."""
+    return ShuffleStats(
+        sent=jax.lax.psum(stats.sent, axis_name),
+        overflow=jax.lax.psum(stats.overflow, axis_name),
+        capacity=stats.capacity,
+    )
+
+
+def mapreduce_combiner_histogram(log: EventLog,
+                                 num_sites: int,
+                                 num_weeks: int = WEEKS_PER_YEAR,
+                                 axis_name: str = "data",
+                                 histogram_fn=site_week_histogram,
+                                 ) -> jnp.ndarray:
+    """MapReduce WITH a combiner — the §Perf hillclimb of the paper's
+    slowest stack (EXPERIMENTS.md §Perf cell 3).
+
+    Hadoop's classic fix for shuffle-bound jobs: aggregate map output
+    locally before the shuffle. The paper's MapReduce implementation ships
+    every record to its reducer; but the site x week histogram is a
+    commutative monoid, so each mapper can pre-reduce its records into
+    partial (site, week) counts and the shuffle only moves histogram
+    *slices*: bytes drop from O(records x 16 B) to O(sites x weeks x 8 B),
+    independent of record count. Functionally identical output to
+    ``mapreduce_histogram`` (tests assert exact equality); the dataflow is
+    an all-to-all of pre-reduced strided site blocks + a local sum — i.e.
+    the combiner turns MapReduce into Sphere's dataflow, which is exactly
+    why Sphere won Tables 4/5.
+    """
+    p = jax.lax.axis_size(axis_name)
+    local = histogram_fn(log, num_sites, num_weeks)   # [S, W, 2]
+    # regroup rows so destination d's strided sites (j % P == d) form a
+    # contiguous block: row (d, i) = site i * P + d
+    s_local = num_sites // p
+    blocks = local.reshape(s_local, p, num_weeks, 2).transpose(1, 0, 2, 3)
+    # shuffle: block d of every device -> device d; then sum the P partials
+    exch = jax.lax.all_to_all(blocks, axis_name, split_axis=0,
+                              concat_axis=0, tiled=True)
+    return jnp.sum(exch.reshape(p, s_local, num_weeks, 2), axis=0)

@@ -1,0 +1,104 @@
+"""NodeDoctor: the SPM statistic as cluster fault attribution.
+
+Paper §8 observes that once the SPM statistic is computed, "relatively
+effective statistical models can be computed by looking for changes over time
+t in the rho_{j,t} statistic using CUSUM, GLR and related change detection
+models". We take the paper's own Table 1 generalization seriously and apply
+it to the training cluster itself:
+
+    site   = host (chip/VM) id
+    entity = training step (or data shard) id
+    mark   = "this step subsequently failed / straggled"
+
+A host whose rho_{host,t} breaks upward is marking the steps it touches —
+exactly the drive-by-exploit structure. The runtime (repro.runtime.trainer)
+feeds step telemetry here and blocklists hosts whose CUSUM alarm fires. This
+is what makes the paper's technique a first-class feature of the training
+framework rather than a bolted-on demo.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.common.types import EventLog, WEEKS_PER_YEAR
+from repro.core.spm import malstone_b, site_week_histogram
+
+
+class DoctorReport(NamedTuple):
+    rho: jnp.ndarray          # [hosts, buckets] running failure proportion
+    cusum: jnp.ndarray        # [hosts, buckets] one-sided CUSUM statistic
+    alarm: jnp.ndarray        # bool [hosts] — CUSUM crossed threshold
+    suspect_rank: jnp.ndarray  # [hosts] argsort by final CUSUM, worst first
+
+
+def host_telemetry_log(host_id: jnp.ndarray, step_id: jnp.ndarray,
+                       step_time_bucket: jnp.ndarray,
+                       failed: jnp.ndarray) -> EventLog:
+    """Pack runtime telemetry into the site-entity-mark model."""
+    return EventLog(site_id=host_id.astype(jnp.int32),
+                    entity_id=step_id.astype(jnp.int32),
+                    timestamp=step_time_bucket.astype(jnp.int32),
+                    mark=failed.astype(jnp.int32))
+
+
+def diagnose(log: EventLog, num_hosts: int,
+             num_buckets: int = WEEKS_PER_YEAR,
+             drift_sigmas: float = 0.5,
+             threshold_sigmas: float = 6.0,
+             baseline: float | None = None) -> DoctorReport:
+    """Run MalStone B over telemetry and a normalized one-sided CUSUM over
+    the *per-bucket* mark counts.
+
+    Per bucket, the host's marked count is compared against the cluster
+    baseline proportion in binomial-std units::
+
+        sigma_t = sqrt(total_t * baseline * (1 - baseline))
+        z_t     = (marked_t - baseline * total_t) / sigma_t - drift_sigmas
+        c_t     = max(0, c_{t-1} + z_t);  alarm iff max_t c_t > threshold
+
+    Normalizing by sigma makes the alarm scale-free (20 steps/bucket or
+    20k), and the cluster-wide ``baseline`` default means a uniformly flaky
+    fleet stays quiet — only *relatively* bad hosts alarm. The reported
+    ``rho`` is still the paper's MalStone-B running ratio.
+    """
+    hist = site_week_histogram(log, num_hosts, num_buckets)
+    res = malstone_b(hist)
+    rho = res.rho  # [hosts, buckets] (running ratio, paper semantics)
+
+    total_t = hist[..., 0].astype(jnp.float32)   # per-bucket counts
+    marked_t = hist[..., 1].astype(jnp.float32)
+
+    if baseline is None:
+        # median per-host mark proportion: robust to one bad host dominating
+        # the record stream (a global mean would rise with the bad host's
+        # own failures and mask it — self-poisoning baseline)
+        host_total = total_t.sum(axis=-1)
+        host_marked = marked_t.sum(axis=-1)
+        prop = jnp.where(host_total > 0,
+                         host_marked / jnp.maximum(host_total, 1.0), jnp.nan)
+        baseline = jnp.nan_to_num(jnp.nanmedian(prop), nan=0.0)
+    baseline = jnp.clip(baseline, 1e-4, 1.0 - 1e-4)
+
+    sigma = jnp.sqrt(jnp.maximum(total_t, 1.0) * baseline * (1.0 - baseline))
+    z = (marked_t - baseline * total_t) / sigma - drift_sigmas
+    z = jnp.where(total_t > 0, z, 0.0)  # idle buckets contribute nothing
+
+    # one-sided CUSUM via a scan-free cummin trick:
+    #   c_t = max(0, c_{t-1} + z_t) == cumsum(z)_t - min_{s<=t}(0, cumsum(z)_s)
+    cs = jnp.cumsum(z, axis=-1)
+    # min over prefix sums {0, cs_0, ..., cs_t} (inclusive of cs_t so the
+    # statistic resets exactly to 0, never below)
+    running_min = jnp.minimum.accumulate(
+        jnp.concatenate([jnp.zeros_like(cs[..., :1]), cs], axis=-1), axis=-1)
+    cusum = cs - running_min[..., 1:]
+
+    final = cusum[..., -1]
+    alarm = jnp.max(cusum, axis=-1) > threshold_sigmas
+    # only hosts that actually served steps can be suspects
+    served = total_t.sum(axis=-1) > 0
+    alarm = alarm & served
+    rank = jnp.argsort(-jnp.where(served, final, -jnp.inf))
+    return DoctorReport(rho=rho, cusum=cusum, alarm=alarm, suspect_rank=rank)

@@ -1,0 +1,231 @@
+"""MalStone A & B drivers over a device mesh.
+
+``malstone_run`` is the public entry point: give it an event log sharded over
+the record dimension, a mesh, and a backend name; it returns the SpmResult
+with identical values regardless of backend (tests assert exact equality of
+the integer histograms across backends — the paper's three stacks compute the
+same statistic, only the dataflow differs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.common.types import EventLog, SpmResult, WEEKS_PER_YEAR
+from repro.core import spm as spm_lib
+from repro.core.backends import (
+    mapreduce_histogram,
+    sphere_histogram,
+    streams_histogram,
+)
+from repro.core.backends.mapreduce import mapreduce_combiner_histogram
+
+
+def _pad_sites(num_sites: int, parts: int) -> int:
+    return ((num_sites + parts - 1) // parts) * parts
+
+
+def _finalize(hist: jnp.ndarray, statistic: str) -> SpmResult:
+    if statistic == "A":
+        return spm_lib.malstone_a(hist)
+    if statistic == "B":
+        return spm_lib.malstone_b(hist)
+    if statistic == "B-fixed":
+        return spm_lib.malstone_b_fixed_denominator(hist)
+    raise ValueError(f"unknown statistic {statistic!r}")
+
+
+def _axis_size(mesh: Mesh, axis_name) -> int:
+    if isinstance(axis_name, str):
+        return mesh.shape[axis_name]
+    size = 1
+    for a in axis_name:
+        size *= mesh.shape[a]
+    return size
+
+
+def malstone_run(log: EventLog,
+                 num_sites: int,
+                 *,
+                 mesh: Mesh,
+                 statistic: str = "B",
+                 backend: str = "streams",
+                 num_weeks: int = WEEKS_PER_YEAR,
+                 axis_name="data",
+                 capacity_factor: float = 2.0,
+                 histogram_fn=None,
+                 donate_log: bool = False) -> SpmResult:
+    """Run MalStone over the mesh. Returns a replicated, full-site SpmResult.
+
+    ``axis_name`` may be a single mesh axis or a tuple (the production
+    meshes treat every chip as a data-cloud node: ("pod","data","model")).
+    The log must be shardable over the record dimension by the total size of
+    ``axis_name`` (caller pads with ``valid=False`` rows if needed).
+    """
+    parts = _axis_size(mesh, axis_name)
+    s_pad = _pad_sites(num_sites, parts)
+    hist_fn = histogram_fn or spm_lib.site_week_histogram
+
+    def local(log_shard: EventLog) -> jnp.ndarray:
+        if backend == "streams":
+            return streams_histogram(log_shard, s_pad, num_weeks, axis_name,
+                                     histogram_fn=hist_fn)
+        if backend == "sphere":
+            owned = sphere_histogram(log_shard, s_pad, num_weeks, axis_name,
+                                     histogram_fn=hist_fn)
+            # Gather owned contiguous blocks back to full (tests / API parity;
+            # production would keep the partitioned result — see
+            # ``malstone_run_partitioned``).
+            return jax.lax.all_gather(owned, axis_name, axis=0, tiled=True)
+        if backend in ("mapreduce", "mapreduce_combiner"):
+            if backend == "mapreduce":
+                owned, _ = mapreduce_histogram(
+                    log_shard, s_pad, num_weeks, axis_name,
+                    capacity_factor=capacity_factor, histogram_fn=hist_fn)
+            else:
+                owned = mapreduce_combiner_histogram(
+                    log_shard, s_pad, num_weeks, axis_name,
+                    histogram_fn=hist_fn)
+            # owned rows are strided (site = row * P + d): gather + unstride.
+            gathered = jax.lax.all_gather(owned, axis_name, axis=0)  # [P,S/P,W,2]
+            return jnp.transpose(gathered, (1, 0, 2, 3)).reshape(
+                s_pad, num_weeks, 2)
+        raise ValueError(f"unknown backend {backend!r}")
+
+    spec = EventLog(
+        site_id=P(axis_name), entity_id=P(axis_name), timestamp=P(axis_name),
+        mark=P(axis_name),
+        event_seq=None if log.event_seq is None else P(axis_name),
+        shard_hash=None if log.shard_hash is None else P(axis_name),
+        valid=None if log.valid is None else P(axis_name),
+    )
+    fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=P(),
+                   check_vma=False)
+    hist = jax.jit(fn)(log)
+    hist = hist[:num_sites]
+    return _finalize(hist, statistic)
+
+
+def malstone_run_partitioned(log: EventLog,
+                             num_sites: int,
+                             *,
+                             mesh: Mesh,
+                             statistic: str = "B",
+                             num_weeks: int = WEEKS_PER_YEAR,
+                             axis_name="data") -> SpmResult:
+    """Sphere-style production path: the result stays partitioned by site
+    block (device d owns sites [d*S/P, (d+1)*S/P)); nothing is re-broadcast.
+
+    Returns an SpmResult whose arrays are sharded over ``axis_name`` on the
+    site dimension.
+    """
+    parts = _axis_size(mesh, axis_name)
+    s_pad = _pad_sites(num_sites, parts)
+
+    def local(log_shard: EventLog) -> SpmResult:
+        owned = sphere_histogram(log_shard, s_pad, num_weeks, axis_name)
+        return _finalize(owned, statistic)
+
+    spec = EventLog(
+        site_id=P(axis_name), entity_id=P(axis_name), timestamp=P(axis_name),
+        mark=P(axis_name),
+        event_seq=None if log.event_seq is None else P(axis_name),
+        shard_hash=None if log.shard_hash is None else P(axis_name),
+        valid=None if log.valid is None else P(axis_name),
+    )
+    out_spec = SpmResult(rho=P(axis_name), total=P(axis_name),
+                         marked=P(axis_name))
+    fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=out_spec,
+                   check_vma=False)
+    return jax.jit(fn)(log)
+
+
+def malstone_lowerable(num_records_global: int, num_sites: int, *,
+                       mesh: Mesh, backend: str = "sphere",
+                       statistic: str = "B",
+                       num_weeks: int = WEEKS_PER_YEAR,
+                       axis_name=("data", "model"),
+                       capacity_factor: float = 1.5):
+    """(fn, example_log_SDS) for dry-run lowering of the paper's workload.
+
+    The log is a ShapeDtypeStruct stand-in (no allocation): the paper's
+    benchmark classes are huge (B-10 = 10 billion records = 1 TB), exactly
+    what ``.lower().compile()`` is for. Every chip acts as one data-cloud
+    node (records sharded over all mesh axes)."""
+    parts = _axis_size(mesh, axis_name)
+    n = (num_records_global // parts) * parts
+    s_pad = _pad_sites(num_sites, parts)
+
+    def fn(log: EventLog):
+        def local(log_shard: EventLog) -> jnp.ndarray:
+            if backend == "streams":
+                hist = streams_histogram(log_shard, s_pad, num_weeks,
+                                         axis_name)
+            elif backend == "sphere":
+                hist = sphere_histogram(log_shard, s_pad, num_weeks,
+                                        axis_name)
+            elif backend == "mapreduce":
+                hist, _ = mapreduce_histogram(
+                    log_shard, s_pad, num_weeks, axis_name,
+                    capacity_factor=capacity_factor)
+            elif backend == "mapreduce_combiner":
+                hist = mapreduce_combiner_histogram(
+                    log_shard, s_pad, num_weeks, axis_name)
+            else:
+                raise ValueError(backend)
+            return _finalize(hist, statistic).rho
+
+        spec = EventLog(site_id=P(axis_name), entity_id=P(axis_name),
+                        timestamp=P(axis_name), mark=P(axis_name))
+        # streams output is replicated; sphere/mapreduce stay partitioned
+        # by site (the production layout — nothing is re-broadcast)
+        out_spec = P() if backend == "streams" else P(axis_name)
+        return shard_map(local, mesh=mesh, in_specs=(spec,),
+                         out_specs=out_spec, check_vma=False)(log)
+
+    import jax as _jax
+    sds = lambda: _jax.ShapeDtypeStruct((n,), jnp.int32)
+    log_sds = EventLog(site_id=sds(), entity_id=sds(), timestamp=sds(),
+                       mark=sds())
+    return fn, log_sds
+
+
+def malstone_single_device(log: EventLog, num_sites: int,
+                           statistic: str = "B",
+                           num_weeks: int = WEEKS_PER_YEAR,
+                           histogram_fn=None) -> SpmResult:
+    """Reference single-device path (the "fits in a database" case of §1)."""
+    hist_fn = histogram_fn or spm_lib.site_week_histogram
+    hist = hist_fn(log, num_sites, num_weeks)
+    return _finalize(hist, statistic)
+
+
+def pad_log_to(log: EventLog, target: int) -> EventLog:
+    """Pad a log with invalid rows so the record dim divides the mesh."""
+    n = log.num_records
+    if n == target:
+        if log.valid is None:
+            return log._replace(valid=jnp.ones((n,), bool))
+        return log
+    pad = target - n
+    assert pad > 0, (n, target)
+
+    def padcol(x, fill=0):
+        return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+    valid = log.valid if log.valid is not None else jnp.ones((n,), bool)
+    return EventLog(
+        site_id=padcol(log.site_id),
+        entity_id=padcol(log.entity_id),
+        timestamp=padcol(log.timestamp),
+        mark=padcol(log.mark),
+        event_seq=None if log.event_seq is None else padcol(log.event_seq),
+        shard_hash=None if log.shard_hash is None else padcol(log.shard_hash),
+        valid=jnp.concatenate([valid, jnp.zeros((pad,), bool)]),
+    )

@@ -1,0 +1,47 @@
+"""Exposure / monitor window algebra (paper Section 3, Figure 1).
+
+MalStone B's monitor windows share a start time and grow by one week per step
+(`t_1 < t_2 < ... < t_52`); this module turns window specs into week-bucket
+masks so the aggregation kernels can stay dense.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.types import (
+    SECONDS_PER_WEEK,
+    SECONDS_PER_YEAR,
+    WEEKS_PER_YEAR,
+    WindowSpec,
+)
+
+
+def week_of(ts: jnp.ndarray, num_weeks: int = WEEKS_PER_YEAR) -> jnp.ndarray:
+    w = ts // SECONDS_PER_WEEK
+    return jnp.clip(w, 0, num_weeks - 1).astype(jnp.int32)
+
+
+def growing_monitor_windows(num_weeks: int = WEEKS_PER_YEAR) -> list[WindowSpec]:
+    """MalStone B's window sequence: year start -> end of week t."""
+    out = []
+    for t in range(1, num_weeks + 1):
+        end = min(t * SECONDS_PER_WEEK, SECONDS_PER_YEAR)
+        out.append(WindowSpec(0, SECONDS_PER_YEAR, 0, end))
+    return out
+
+
+def in_window(ts: jnp.ndarray, start: int, end: int) -> jnp.ndarray:
+    return (ts >= start) & (ts < end)
+
+
+def week_mask_for_window(spec: WindowSpec,
+                         num_weeks: int = WEEKS_PER_YEAR) -> jnp.ndarray:
+    """Boolean [num_weeks] mask of week buckets fully/partially covered by
+    the monitor window. Week granularity is the benchmark's native bucketing,
+    so windows are week-aligned in practice."""
+    week_starts = jnp.arange(num_weeks) * SECONDS_PER_WEEK
+    week_ends = jnp.minimum(week_starts + SECONDS_PER_WEEK, SECONDS_PER_YEAR)
+    # clamp final bucket (week 51 absorbs the year tail, matching week_of)
+    week_ends = week_ends.at[num_weeks - 1].set(SECONDS_PER_YEAR)
+    return (week_starts < spec.mon_end) & (week_ends > spec.mon_start)

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DataConfig,
+    TokenPipeline,
+    malgen_token_stream,
+)
+
+__all__ = ["DataConfig", "TokenPipeline", "malgen_token_stream"]

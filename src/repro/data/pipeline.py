@@ -1,0 +1,102 @@
+"""Deterministic sharded token pipeline.
+
+Two sources:
+
+- ``malgen``: the paper's generator as a corpus. MalGen event records are
+  rendered to their 100-byte fixed-width ASCII lines (malgen/records.py) and
+  byte-tokenized — the LM training examples literally learn on MalStone log
+  data, keeping the paper's data plane and the training plane on one mesh.
+- ``synthetic``: a fixed-vocabulary deterministic stream (ziggurat of PRNG
+  keys) for pure-throughput benchmarking.
+
+Determinism contract: batch ``i`` of epoch ``e`` for host shard ``h`` is a
+pure function of (seed, i, e, h). That's what makes elastic restarts and
+straggler reassignment reproducible (runtime/trainer.py relies on it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.malgen import MalGenConfig, encode_records, generate_shard
+from repro.malgen.seeding import SeedInfo, make_seed
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    source: str = "synthetic"          # "synthetic" | "malgen"
+    vocab_size: int = 256
+    seq_len: int = 512
+    global_batch: int = 8
+    seed: int = 0
+    malgen: Optional[MalGenConfig] = None
+
+
+class TokenPipeline:
+    """Iterator of {tokens, labels} with a deterministic (step -> batch)
+    mapping. ``shard`` / ``num_shards`` slice the global batch for
+    multi-host data loading."""
+
+    def __init__(self, cfg: DataConfig, shard: int = 0, num_shards: int = 1):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.shard = shard
+        self.num_shards = num_shards
+        self.local_batch = cfg.global_batch // num_shards
+        self._malgen_seed: Optional[SeedInfo] = None
+        if cfg.source == "malgen":
+            mg = cfg.malgen or MalGenConfig(num_sites=10_000,
+                                            num_entities=100_000)
+            key = jax.random.key(cfg.seed)
+            # enough marked events for any step index (regenerated lazily)
+            self._malgen_cfg = mg
+            self._malgen_seed = make_seed(key, mg, total_records=1 << 20)
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        if cfg.source == "synthetic":
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.key(cfg.seed), step),
+                self.shard)
+            toks = jax.random.randint(
+                key, (self.local_batch, cfg.seq_len + 1), 0, cfg.vocab_size,
+                dtype=jnp.int32)
+        elif cfg.source == "malgen":
+            toks = self._malgen_tokens(step)
+        else:
+            raise ValueError(cfg.source)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def _malgen_tokens(self, step: int) -> jnp.ndarray:
+        need = self.local_batch * (self.cfg.seq_len + 1)
+        n_rec = (need + 99) // 100 + 1
+        virtual_shard = step * self.num_shards + self.shard
+        log = generate_shard(self._malgen_seed, self._malgen_cfg,
+                             virtual_shard % 65536, 65536, n_rec)
+        blob = encode_records(
+            np.asarray(log.event_seq), np.asarray(log.shard_hash),
+            np.asarray(log.timestamp), np.asarray(log.site_id),
+            np.asarray(log.entity_id), np.asarray(log.mark))
+        bytes_arr = np.frombuffer(blob, np.uint8)[:need]
+        toks = bytes_arr.astype(np.int32) % self.cfg.vocab_size
+        return jnp.asarray(
+            toks.reshape(self.local_batch, self.cfg.seq_len + 1))
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def malgen_token_stream(cfg: DataConfig, steps: int,
+                        shard: int = 0, num_shards: int = 1):
+    """Convenience: list of ``steps`` batches from the malgen source."""
+    pipe = TokenPipeline(
+        dataclasses.replace(cfg, source="malgen"), shard, num_shards)
+    return [pipe.batch_at(i) for i in range(steps)]

@@ -1,0 +1,3 @@
+from repro.distributed.pipeline import pipeline_apply, PipelineConfig
+
+__all__ = ["pipeline_apply", "PipelineConfig"]

@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+Layers are split into ``num_stages`` contiguous stages, one per device along
+the "pipe" mesh axis. Microbatches stream through: each scan step every
+stage (a) runs its layer stack on its current microbatch and (b)
+``ppermute``s activations to the next stage. The bubble is the standard
+(stages - 1) / (microbatches + stages - 1) fraction.
+
+The production dry-run meshes use (pod, data, model) per the assignment;
+this module is the PP building block for deeper topologies (e.g. swap
+"pod" for "pipe" on 2-pod meshes to pipeline across pods, hiding the slow
+inter-pod links behind microbatch concurrency — the classic reason to PP
+across pods). Tested functionally on an 8-device host mesh
+(tests/md_scripts/pipeline_check.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    num_stages: int
+    num_microbatches: int
+    axis_name: str = "pipe"
+
+
+def pipeline_apply(fn: Callable[[Any, jnp.ndarray, int], jnp.ndarray],
+                   stage_params: Any,
+                   x: jnp.ndarray,
+                   cfg: PipelineConfig,
+                   mesh: Mesh):
+    """Run ``fn(params_for_stage, microbatch, stage_idx)`` as a pipeline.
+
+    - ``stage_params``: pytree whose leaves have leading dim num_stages
+      (sharded over the pipe axis).
+    - ``x``: [num_microbatches * mb, ...] global batch.
+
+    Returns fn(...(fn(x))) applied through all stages, same shape as x.
+    """
+    s, m = cfg.num_stages, cfg.num_microbatches
+    ax = cfg.axis_name
+    assert x.shape[0] % m == 0
+    mb = x.shape[0] // m
+
+    def stage_fn(params_local, x_local):
+        # params_local: leaves [1, ...] (this stage's slice)
+        # x_local: [m * mb, ...] microbatches only valid on stage 0 at start
+        params_me = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(ax)
+        n_ticks = m + s - 1
+
+        xs = x_local.reshape(m, mb, *x_local.shape[1:])
+        buf = jnp.zeros((m, mb) + x_local.shape[1:], x_local.dtype)
+
+        def tick(carry, t):
+            cur, out = carry
+            # stage 0 ingests microbatch t (if any); others use what arrived
+            feed = jnp.where(t < m, t, 0)
+            inject = xs[feed]
+            cur = jnp.where(stage == 0,
+                            jnp.where(t < m, inject, cur * 0), cur)
+            y = fn(params_me, cur, stage)
+            # the last stage writes its result for microbatch (t - s + 1)
+            widx = jnp.clip(t - (s - 1), 0, m - 1)
+            should_write = (stage == s - 1) & (t >= s - 1)
+            out = jnp.where(
+                should_write,
+                out.at[widx].set(y.astype(out.dtype)),
+                out)
+            # shift activations downstream (ring: last -> first carries junk,
+            # overwritten by stage-0 injection next tick)
+            nxt = jax.lax.ppermute(
+                y, ax, [(i, (i + 1) % s) for i in range(s)])
+            return (nxt, out), None
+
+        cur0 = jnp.zeros((mb,) + x_local.shape[1:], x_local.dtype)
+        (_, out), _ = jax.lax.scan(tick, (cur0, buf), jnp.arange(n_ticks))
+        # only the last stage populated `out`; broadcast it to all stages
+        # (other stages' buffers are zero, so a psum is a broadcast)
+        out = jax.lax.psum(out, ax)
+        return out.reshape(m * mb, *x_local.shape[1:])
+
+    fn_sharded = shard_map(
+        stage_fn, mesh=mesh,
+        in_specs=(P(ax), P()),       # params split by stage; x replicated
+        out_specs=P(),
+        check_vma=False)
+    return fn_sharded(stage_params, x)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the MalStone/MalGen compute hot spots.
+
+The paper's performance-critical loops are (a) the Reducer's group-by-site
+aggregation (the whole point of the middleware comparison) and (b) MalGen's
+power-law site sampling. Each kernel ships:
+
+- ``<name>/<name>.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+  (TPU is the *target*; this container validates via ``interpret=True``),
+- ``<name>/ops.py``    — the jit'd public wrapper (padding, reshapes,
+  interpret-mode switch),
+- ``<name>/ref.py``    — the pure-jnp oracle the tests sweep against.
+
+TPU adaptation notes (vs the GPU idiom): TPU has no atomics, so the GPU
+"atomicAdd histogram" becomes tile-local dense accumulation — scatter-add is
+re-expressed as a one-hot matmul that runs on the MXU, with the histogram
+tile resident in VMEM across the whole record stream (see
+``segment_hist/``). Binary search with per-lane gathers is not
+vector-friendly on TPU, so the power-law sampler uses sorted-CDF
+comparison-counting on the VPU (see ``powerlaw_sample/``).
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.powerlaw_sample.ops import powerlaw_sample
+
+__all__ = ["powerlaw_sample"]

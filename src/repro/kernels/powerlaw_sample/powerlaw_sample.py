@@ -1,0 +1,73 @@
+"""MalGen's power-law site sampler — Pallas TPU kernel.
+
+Inverse-CDF sampling: ``site = searchsorted(cdf, u, side='right')``. The GPU
+idiom is a per-thread binary search (data-dependent gathers). TPU vector
+units have no per-lane gather, so the kernel uses the sorted-CDF
+**comparison-count** identity instead:
+
+    searchsorted_right(cdf, u) == sum_s 1{cdf[s] <= u}
+
+which is a broadcast-compare + reduction — pure VPU work with fully regular
+memory access. The CDF streams through VMEM in lane-sized tiles and every
+record tile accumulates its count; cost is O(N * S / lanes) compares but
+zero irregular access, which wins on TPU whenever S fits the VMEM budget
+(the paper's default is ~120k sites — 0.5 MB of f32 CDF).
+
+Grid: (record_tiles, cdf_tiles), CDF innermost so the per-record count
+accumulates in the output block while CDF tiles stream through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RECORD_TILE = 512   # u's per block (sublane-major [8, 64] view internally)
+CDF_TILE = 2048     # CDF entries per streamed block
+
+
+def _kernel(u_ref, cdf_ref, out_ref, *, cdf_tile: int, num_sites: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[0, :]          # [TR] f32
+    cdf = cdf_ref[0, :]      # [TC] f32 (padded tail = +2.0 > any u)
+
+    # count of cdf entries <= u, this tile: [TR, TC] compare -> row-sum
+    le = (cdf[None, :] <= u[:, None])
+    counts = jnp.sum(le.astype(jnp.int32), axis=1)
+    out_ref[0, :] += counts
+
+
+def powerlaw_sample_pallas(u: jnp.ndarray, cdf: jnp.ndarray,
+                           num_sites: int, *,
+                           record_tile: int = RECORD_TILE,
+                           cdf_tile: int = CDF_TILE,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Raw entry. u: [n_rec_tiles, record_tile] f32 in [0,1);
+    cdf: [n_cdf_tiles, cdf_tile] f32 padded with +2.0 beyond num_sites.
+    Returns int32 [n_rec_tiles, record_tile] counts == site indices
+    (clamped by ops.py)."""
+    n_rec_tiles, tr = u.shape
+    n_cdf_tiles, tc = cdf.shape
+    assert tr == record_tile and tc == cdf_tile
+
+    grid = (n_rec_tiles, n_cdf_tiles)
+    u_spec = pl.BlockSpec((1, record_tile), lambda i, j: (i, 0))
+    cdf_spec = pl.BlockSpec((1, cdf_tile), lambda i, j: (j, 0))
+    out_spec = pl.BlockSpec((1, record_tile), lambda i, j: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, cdf_tile=cdf_tile, num_sites=num_sites),
+        grid=grid,
+        in_specs=[u_spec, cdf_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rec_tiles, record_tile), jnp.int32),
+        interpret=interpret,
+    )(u, cdf)

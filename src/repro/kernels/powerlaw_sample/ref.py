@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the powerlaw_sample kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def powerlaw_sample_ref(u: jnp.ndarray, cdf: jnp.ndarray) -> jnp.ndarray:
+    """searchsorted(cdf, u, side='right') clamped to valid site range."""
+    idx = jnp.searchsorted(cdf, u.reshape(-1), side="right")
+    return jnp.clip(idx, 0, cdf.shape[0] - 1).astype(jnp.int32)

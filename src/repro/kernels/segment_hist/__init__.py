@@ -1,0 +1,3 @@
+from repro.kernels.segment_hist.ops import segment_hist
+
+__all__ = ["segment_hist"]

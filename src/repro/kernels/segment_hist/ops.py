@@ -1,0 +1,68 @@
+"""Public jit'd wrapper for the segment_hist Pallas kernel.
+
+Handles padding (records to a tile multiple, sites to the site-tile
+multiple), the [S, 2*W_pad] -> [S, W, 2] relayout, and the interpret-mode
+switch (CPU container validates the kernel body in interpret mode; on TPU
+pass ``interpret=False``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import EventLog, WEEKS_PER_YEAR
+from repro.kernels.segment_hist.segment_hist import (
+    RECORD_TILE,
+    SITE_TILE,
+    segment_hist_pallas,
+    _round_up,
+)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_sites", "num_weeks", "site_tile", "record_tile",
+                     "interpret"))
+def segment_hist(site: jnp.ndarray, week: jnp.ndarray, mark: jnp.ndarray,
+                 valid: jnp.ndarray, *, num_sites: int,
+                 num_weeks: int = WEEKS_PER_YEAR,
+                 site_tile: int = SITE_TILE,
+                 record_tile: int = RECORD_TILE,
+                 interpret: bool = True) -> jnp.ndarray:
+    """int32 [num_sites, num_weeks, 2] histogram via the Pallas kernel."""
+    n = site.shape[0]
+    n_pad = _round_up(max(n, 1), record_tile)
+    s_pad = _round_up(max(num_sites, 1), site_tile)
+    w_pad = max(64, _round_up(num_weeks, 64))
+
+    def prep(x, fill=0):
+        x = x.astype(jnp.int32).reshape(-1)
+        x = jnp.pad(x, (0, n_pad - n), constant_values=fill)
+        return x.reshape(n_pad // record_tile, record_tile)
+
+    ok = (valid.astype(jnp.int32) > 0) & (site >= 0) & (site < num_sites) \
+        & (week >= 0) & (week < num_weeks)
+    out = segment_hist_pallas(
+        prep(site), prep(week), prep(mark), prep(ok.astype(jnp.int32)),
+        num_sites_padded=s_pad, num_weeks=num_weeks,
+        site_tile=site_tile, record_tile=record_tile, interpret=interpret)
+
+    total = out[:num_sites, :num_weeks]
+    marked = out[:num_sites, w_pad:w_pad + num_weeks]
+    return jnp.stack([total, marked], axis=-1)
+
+
+def segment_hist_eventlog(log: EventLog, num_sites: int,
+                          num_weeks: int = WEEKS_PER_YEAR,
+                          site_offset: int = 0,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Drop-in replacement for ``repro.core.spm.site_week_histogram`` backed
+    by the Pallas kernel (same signature contract as ``histogram_fn`` in the
+    backends)."""
+    valid = log.valid_mask()
+    return segment_hist(
+        log.site_id - site_offset, log.week(num_weeks=num_weeks), log.mark,
+        valid, num_sites=num_sites, num_weeks=num_weeks, interpret=interpret)

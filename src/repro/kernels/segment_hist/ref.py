@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the segment_hist kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_hist_ref(site: jnp.ndarray, week: jnp.ndarray,
+                     mark: jnp.ndarray, valid: jnp.ndarray,
+                     num_sites: int, num_weeks: int) -> jnp.ndarray:
+    """int32 [num_sites, num_weeks, 2]; channel 0 = events, 1 = marks.
+
+    Flat arrays; ``valid`` gates rows; out-of-range sites ignored.
+    """
+    site = site.reshape(-1)
+    week = week.reshape(-1)
+    mark = mark.reshape(-1)
+    valid = valid.reshape(-1)
+
+    ok = (valid > 0) & (site >= 0) & (site < num_sites) \
+        & (week >= 0) & (week < num_weeks)
+    flat = jnp.where(ok, site * num_weeks + week, 0)
+    ones = ok.astype(jnp.int32)
+    marks = (ok & (mark > 0)).astype(jnp.int32)
+    total = jax.ops.segment_sum(ones, flat, num_segments=num_sites * num_weeks)
+    marked = jax.ops.segment_sum(marks, flat, num_segments=num_sites * num_weeks)
+    return jnp.stack([total, marked], -1).reshape(num_sites, num_weeks, 2)

@@ -1,0 +1,120 @@
+"""Fused (site, week, mark) -> (total, marked) histogram — Pallas TPU kernel.
+
+This is the MalStone Reducer's inner loop (paper §6.1): for every record,
+``hist[site, week, 0] += 1`` and ``hist[site, week, 1] += mark``. On GPU one
+would scatter with atomics; TPU has no atomics, so the kernel re-expresses
+scatter-add as a **one-hot matmul** that runs on the MXU:
+
+    oh_site[r, s] = (site[r] == tile_start + s)          [TR, TS]
+    rhs[r, 2W]    = [week_onehot * valid, week_onehot * mark]   [TR, 2W]
+    tile_out     += oh_site^T @ rhs                      [TS, 2W]
+
+Memory-hierarchy plan (HBM -> VMEM -> MXU):
+  * grid = (site_tiles, record_tiles); record dim is innermost so the
+    [TS, 2W] histogram tile stays resident in VMEM for the entire record
+    stream (initialized at record-tile 0, flushed once).
+  * records stream through VMEM in [1, TR] blocks (TR a multiple of 128
+    lanes); each block is read once per site tile.
+  * the matmul is TS x TR x 2W_pad with every dim a multiple of the MXU's
+    128 systolic width (TS=256, TR=1024, 2W padded to 128 for W=52).
+
+Exactness: each per-record-tile partial count is <= TR < 2^24, so the f32
+MXU matmul is exact; cross-tile accumulation happens in int32 in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU/VPU-aligned defaults (multiples of 128 lanes / 8 sublanes).
+SITE_TILE = 256     # TS: sites per histogram tile
+RECORD_TILE = 1024  # TR: records per stream block
+
+
+def _kernel(site_ref, week_ref, mark_ref, valid_ref, out_ref, *,
+            mark_col_offset: int, w2_pad: int, site_tile: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    site = site_ref[0, :]                      # [TR] int32
+    week = week_ref[0, :]                      # [TR] int32
+    mark = mark_ref[0, :]                      # [TR] int32
+    valid = valid_ref[0, :]                    # [TR] int32 (0/1)
+
+    tile_start = pl.program_id(0) * site_tile
+    local = site - tile_start
+    in_tile = (local >= 0) & (local < site_tile) & (valid > 0)
+
+    tr = site.shape[0]
+    # one-hot site membership [TR, TS] — compare against a lane iota
+    site_iota = jax.lax.broadcasted_iota(jnp.int32, (tr, site_tile), 1)
+    oh_site = jnp.where(
+        (local[:, None] == site_iota) & in_tile[:, None], 1.0, 0.0
+    ).astype(jnp.float32)
+
+    # rhs [TR, 2W_pad]: event-count block at columns [0, W), mark-count
+    # block at [mark_col_offset, mark_col_offset + W)
+    week_iota = jax.lax.broadcasted_iota(jnp.int32, (tr, w2_pad), 1)
+    wk_ev = (week[:, None] == week_iota)
+    wk_mk = ((week[:, None] + mark_col_offset) == week_iota)
+    rhs = (jnp.where(wk_ev, 1.0, 0.0)
+           + jnp.where(wk_mk, mark[:, None].astype(jnp.float32), 0.0))
+    rhs = jnp.where(in_tile[:, None], rhs, 0.0).astype(jnp.float32)
+
+    # MXU: [TS, TR] @ [TR, 2W_pad] — per-tile partials are exact in f32
+    partial = jax.lax.dot_general(
+        oh_site, rhs, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] += partial.astype(jnp.int32)
+
+
+def segment_hist_pallas(site: jnp.ndarray, week: jnp.ndarray,
+                        mark: jnp.ndarray, valid: jnp.ndarray,
+                        num_sites_padded: int, num_weeks: int,
+                        *, site_tile: int = SITE_TILE,
+                        record_tile: int = RECORD_TILE,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Raw kernel entry. Preconditions (ops.py enforces):
+
+    - record arrays are [n_rec_tiles, record_tile] int32,
+    - ``num_sites_padded % site_tile == 0``,
+    - out-of-range site ids already have valid == 0.
+
+    Returns int32 ``[num_sites_padded, 2 * W_pad]`` with the event-count
+    block in columns [0, W) and the mark-count block in [W_pad, W_pad + W)
+    — ops.py slices/stacks back to [S, W, 2].
+    """
+    n_rec_tiles, tr = site.shape
+    assert tr == record_tile, (tr, record_tile)
+    assert num_sites_padded % site_tile == 0
+    n_site_tiles = num_sites_padded // site_tile
+    w_pad = max(64, _round_up(num_weeks, 64))
+    w2_pad = 2 * w_pad
+
+    grid = (n_site_tiles, n_rec_tiles)
+    rec_spec = pl.BlockSpec((1, record_tile), lambda i, j: (j, 0))
+    out_spec = pl.BlockSpec((site_tile, w2_pad), lambda i, j: (i, 0))
+
+    kernel = functools.partial(
+        _kernel, mark_col_offset=w_pad, w2_pad=w2_pad, site_tile=site_tile)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[rec_spec, rec_spec, rec_spec, rec_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((num_sites_padded, w2_pad), jnp.int32),
+        interpret=interpret,
+    )(site, week, mark, valid)
+    return out
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,3 @@
+from repro.kernels.windowed_ratio.ops import windowed_ratio
+
+__all__ = ["windowed_ratio"]

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the windowed_ratio Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.windowed_ratio.windowed_ratio import (
+    SITE_TILE,
+    windowed_ratio_pallas,
+)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("site_tile", "interpret"))
+def windowed_ratio(hist: jnp.ndarray, *, site_tile: int = SITE_TILE,
+                   interpret: bool = True):
+    """MalStone B finalize: hist int32 [S, W, 2] ->
+    (rho f32 [S, W], cum_total i32, cum_marked i32)."""
+    s, w, _ = hist.shape
+    s_pad = _round_up(max(s, 1), site_tile)
+    w_pad = max(128, _round_up(w, 128))
+
+    def pad(x):
+        return jnp.pad(x.astype(jnp.int32), ((0, s_pad - s), (0, w_pad - w)))
+
+    rho, cum_t, cum_m = windowed_ratio_pallas(
+        pad(hist[..., 0]), pad(hist[..., 1]),
+        site_tile=site_tile, interpret=interpret)
+    return rho[:s, :w], cum_t[:s, :w], cum_m[:s, :w]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the windowed_ratio kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.types import safe_ratio
+
+
+def windowed_ratio_ref(hist: jnp.ndarray):
+    """hist int32 [S, W, 2] -> (rho f32 [S, W], cum_total, cum_marked)."""
+    cum_total = jnp.cumsum(hist[..., 0], axis=-1)
+    cum_marked = jnp.cumsum(hist[..., 1], axis=-1)
+    return safe_ratio(cum_marked, cum_total), cum_total, cum_marked

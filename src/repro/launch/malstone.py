@@ -1,0 +1,81 @@
+"""MalStone benchmark launcher — the paper's experiment as a CLI.
+
+    PYTHONPATH=src python -m repro.launch.malstone \
+        --nodes 8 --records-per-node 262144 --sites 10000 \
+        --backend sphere --statistic B
+
+Multi-node on one host uses forced host devices; set ``--nodes`` BEFORE any
+other jax usage (this module sets XLA_FLAGS at import like dryrun).
+"""
+
+import argparse
+import os
+import sys
+
+
+def _preparse_nodes() -> int:
+    for i, a in enumerate(sys.argv):
+        if a == "--nodes" and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith("--nodes="):
+            return int(a.split("=", 1)[1])
+    return 1
+
+
+_N = _preparse_nodes()
+if _N > 1:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_N} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import malstone_run
+from repro.malgen import MalGenConfig, generate_sharded_log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=1)
+    ap.add_argument("--records-per-node", type=int, default=262_144)
+    ap.add_argument("--sites", type=int, default=10_000)
+    ap.add_argument("--entities", type=int, default=100_000)
+    ap.add_argument("--backend", default="sphere",
+                    choices=("streams", "sphere", "mapreduce"))
+    ap.add_argument("--statistic", default="B", choices=("A", "B"))
+    ap.add_argument("--runs", type=int, default=3)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((args.nodes,), ("data",))
+    cfg = MalGenConfig(num_sites=args.sites, num_entities=args.entities)
+
+    total = args.nodes * args.records_per_node
+    print(f"MalGen: {total:,} records ({total * 100 / 1e6:.0f} MB logical) "
+          f"over {args.nodes} nodes")
+    t0 = time.perf_counter()
+    log, _ = generate_sharded_log(jax.random.key(0), cfg, args.nodes,
+                                  args.records_per_node)
+    jax.block_until_ready(log.site_id)
+    print(f"  generated in {time.perf_counter() - t0:.1f}s")
+
+    fn = jax.jit(lambda l: malstone_run(
+        l, cfg.num_sites, mesh=mesh, statistic=args.statistic,
+        backend=args.backend).rho)
+    fn(log).block_until_ready()
+    times = []
+    for r in range(args.runs):
+        t0 = time.perf_counter()
+        rho = fn(log)
+        rho.block_until_ready()
+        times.append(time.perf_counter() - t0)
+        print(f"  run {r + 1}: {times[-1] * 1e3:.1f} ms "
+              f"({total / times[-1] / 1e6:.1f}M records/s)")
+    print(f"MalStone {args.statistic} [{args.backend}] "
+          f"avg {np.mean(times) * 1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

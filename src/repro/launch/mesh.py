@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — device count is locked at first jax init, and
+only launch/dryrun.py (which sets XLA_FLAGS before any import) should see
+512 devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod: (16, 16) = (data, model), 256 chips.
+    Multi-pod:  (2, 16, 16) = (pod, data, model), 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_host_mesh(n: int = 8, axes=("data",)):
+    """Small host-device mesh for functional multi-device tests."""
+    import numpy as np
+    shape = [n] if len(axes) == 1 else None
+    return jax.make_mesh(tuple(shape or ()), axes)

@@ -1,0 +1,86 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --steps 100 --batch 8 --seq-len 512 [--smoke]
+
+``--smoke`` swaps in the reduced same-family config so the launcher is
+exercisable on CPU; the full configs are for real accelerator fleets (their
+compile-only path is launch/dryrun.py). The loop is the fault-tolerant
+runtime (checkpoint/restart + SPM node doctor).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import ALIASES, get_config, get_smoke_config
+from repro.data import DataConfig, TokenPipeline
+from repro.malgen import MalGenConfig
+from repro.models import steps as S
+from repro.optim import AdamWConfig
+from repro.runtime import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ALIASES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient accumulation microbatches")
+    ap.add_argument("--data", default="malgen",
+                    choices=("malgen", "synthetic"))
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"arch={cfg.name} params={cfg.num_params_total / 1e6:.1f}M "
+          f"(active {cfg.num_params_active / 1e6:.1f}M)")
+
+    data = DataConfig(
+        source=args.data, vocab_size=min(cfg.vocab_size, 256),
+        seq_len=args.seq_len, global_batch=args.batch,
+        malgen=MalGenConfig(num_sites=10_000, num_entities=100_000))
+    pipe = TokenPipeline(data)
+
+    def batch_fn(step):
+        b = pipe.batch_at(step)
+        if cfg.family == "vlm":
+            import jax.numpy as jnp
+            b["patches"] = jnp.zeros(
+                (args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            import jax.numpy as jnp
+            b["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return b
+
+    opt_cfg = AdamWConfig(lr=args.lr)
+    state, _ = S.make_train_state(jax.random.key(0), cfg, opt_cfg)
+    if args.accum > 1:
+        step_fn = S.make_grad_accum_train_step(
+            cfg, opt_cfg, args.accum, total_steps=args.steps)
+    else:
+        step_fn = S.make_train_step(cfg, opt_cfg, total_steps=args.steps)
+
+    trainer = Trainer(
+        TrainConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                    ckpt_dir=args.ckpt_dir),
+        jax.jit(step_fn), state, batch_fn)
+    report = trainer.run()
+    losses = [h["loss"] for h in report["history"]]
+    print(f"done: steps={report['final_step']} "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"restarts={report['restarts']} blocklist={report['blocklist']}")
+
+
+if __name__ == "__main__":
+    main()

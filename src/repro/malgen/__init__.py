@@ -1,0 +1,40 @@
+"""MalGen — distributed synthetic site-entity-mark log generator (paper §5).
+
+Three-phase protocol, exactly as the paper describes:
+
+1. **Seed** (head node): pick the marked sites, generate every marked-site
+   event for the year, and derive each entity's mark time (70% mark
+   probability on a marked-site visit, one-week delay; re-visits can only
+   move the mark earlier — paper §5).
+2. **Scatter**: the seed (PRNG key + entity mark table + marked-site set) is
+   what crosses the network. Because generation is a pure function of the
+   key, any node can deterministically reproduce any slice of the global
+   stream — consistency by construction.
+3. **Local generation**: each shard independently generates its share of
+   unmarked-site traffic with a ``fold_in``-derived key, plus its strided
+   slice of the head node's marked-event stream.
+"""
+
+from repro.malgen.powerlaw import power_law_weights, power_law_cdf, sample_sites
+from repro.malgen.seeding import MalGenConfig, SeedInfo, make_seed
+from repro.malgen.generator import (
+    generate_shard,
+    generate_full_log,
+    generate_sharded_log,
+)
+from repro.malgen.records import encode_records, decode_records, RECORD_BYTES
+
+__all__ = [
+    "power_law_weights",
+    "power_law_cdf",
+    "sample_sites",
+    "MalGenConfig",
+    "SeedInfo",
+    "make_seed",
+    "generate_shard",
+    "generate_full_log",
+    "generate_sharded_log",
+    "encode_records",
+    "decode_records",
+    "RECORD_BYTES",
+]

@@ -1,0 +1,98 @@
+"""Phases 2-3 of MalGen: scatter + per-shard local generation (paper §5).
+
+Each shard produces ``records_per_shard`` events:
+
+- its strided slice of the global marked-event stream (regenerated from the
+  seed — phase 2's scatter is the seed, not the events), and
+- locally generated unmarked-site traffic under ``fold_in(key, shard_id)``.
+
+Every record carries the *joined* mark flag of paper §4: 1 iff the entity's
+mark time is <= the visit timestamp — "the fact that the mark is 1 does not
+indicate that the site with Site ID is responsible for the mark".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import EventLog
+from repro.malgen.powerlaw import sample_sites_masked
+from repro.malgen.seeding import MalGenConfig, SeedInfo, marked_event_stream
+
+
+def _fnv1a32(text: str) -> int:
+    """FNV-1a — the "hash of the hostname" in the paper's Event ID scheme."""
+    h = 0x811C9DC5
+    for b in text.encode():
+        h ^= b
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def generate_shard(seed: SeedInfo, cfg: MalGenConfig,
+                   shard_id: int, num_shards: int,
+                   records_per_shard: int,
+                   hostname: str | None = None) -> EventLog:
+    """Phase 3 on one shard. Pure function of (seed, shard_id)."""
+    n_marked_global = seed.num_marked_events
+    # strided slice of the marked stream owned by this shard
+    n_marked_local = len(range(shard_id, n_marked_global, num_shards))
+    n_marked_local = min(n_marked_local, records_per_shard)
+    n_unmarked = records_per_shard - n_marked_local
+
+    m_site, m_entity, m_ts = marked_event_stream(seed, cfg)
+    sl = slice(shard_id, shard_id + n_marked_local * num_shards, num_shards)
+    m_site, m_entity, m_ts = m_site[sl], m_entity[sl], m_ts[sl]
+
+    k = jax.random.fold_in(seed.key, shard_id)
+    k_site, k_ent, k_ts = jax.random.split(k, 3)
+    u_site = sample_sites_masked(k_site, seed.site_weights,
+                                 ~seed.marked_mask, n_unmarked)
+    u_entity = jax.random.randint(k_ent, (n_unmarked,), 0, cfg.num_entities,
+                                  dtype=jnp.int32)
+    u_ts = jax.random.randint(k_ts, (n_unmarked,), 0, cfg.span_seconds,
+                              dtype=jnp.int32)
+
+    site = jnp.concatenate([m_site, u_site])
+    entity = jnp.concatenate([m_entity, u_entity])
+    ts = jnp.concatenate([m_ts, u_ts])
+
+    # joined mark flag (paper §4)
+    mark = (seed.entity_mark_time[entity] <= ts).astype(jnp.int32)
+
+    host = hostname or f"node{shard_id:04d}"
+    shard_hash = jnp.full((records_per_shard,), _fnv1a32(host),
+                          dtype=jnp.uint32)
+    event_seq = jnp.arange(records_per_shard, dtype=jnp.uint32)
+
+    return EventLog(site_id=site, entity_id=entity, timestamp=ts, mark=mark,
+                    event_seq=event_seq, shard_hash=shard_hash)
+
+
+def generate_sharded_log(key: jax.Array, cfg: MalGenConfig,
+                         num_shards: int, records_per_shard: int
+                         ) -> tuple[EventLog, SeedInfo]:
+    """All shards concatenated in shard order (record dim = shards * rps).
+
+    This is the layout ``malstone_run`` expects: sharding the leading dim
+    over the data axis gives each device exactly the records "its node"
+    generated — matching the paper's disk-local layout.
+    """
+    from repro.malgen.seeding import make_seed
+    total = num_shards * records_per_shard
+    seed = make_seed(key, cfg, total)
+    shards = [generate_shard(seed, cfg, s, num_shards, records_per_shard)
+              for s in range(num_shards)]
+    log = EventLog(*[
+        None if shards[0][i] is None
+        else jnp.concatenate([sh[i] for sh in shards])
+        for i in range(len(shards[0]))
+    ])
+    return log, seed
+
+
+def generate_full_log(key: jax.Array, cfg: MalGenConfig,
+                      total_records: int) -> tuple[EventLog, SeedInfo]:
+    """Single-shard convenience wrapper (tests, quickstart)."""
+    return generate_sharded_log(key, cfg, 1, total_records)

@@ -1,0 +1,56 @@
+"""Power-law site popularity (paper §5: "MalGen uses a power law distribution
+to model the number of entities associated with a site").
+
+Site ``i`` (after a random permutation, so popularity is not correlated with
+the id ordering) gets weight ``(rank+1)^-alpha``. Sampling is inverse-CDF: a
+uniform draw binary-searched into the cumulative weight table. The CDF table
+is the natural VMEM-resident structure on TPU — see
+``repro.kernels.powerlaw_sample`` for the Pallas kernel; this module is the
+pure-jnp oracle and host-side path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def power_law_weights(num_sites: int, alpha: float = 1.2,
+                      permutation: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Normalized float32 weights [num_sites]; heavy head, long tail."""
+    ranks = jnp.arange(1, num_sites + 1, dtype=jnp.float32)
+    w = ranks ** (-alpha)
+    w = w / jnp.sum(w)
+    if permutation is not None:
+        w = w[permutation]
+    return w
+
+
+def power_law_cdf(weights: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive cumulative sum; last element == 1 (renormalized)."""
+    cdf = jnp.cumsum(weights.astype(jnp.float32))
+    return cdf / cdf[-1]
+
+
+def sample_sites(key: jax.Array, cdf: jnp.ndarray, num: int) -> jnp.ndarray:
+    """Inverse-CDF sampling: int32 site indices [num]."""
+    u = jax.random.uniform(key, (num,), dtype=jnp.float32)
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(idx, 0, cdf.shape[0] - 1).astype(jnp.int32)
+
+
+def sample_sites_masked(key: jax.Array, weights: jnp.ndarray,
+                        mask: jnp.ndarray, num: int) -> jnp.ndarray:
+    """Sample sites restricted to ``mask`` (True = eligible).
+
+    Used to split generation into the marked-site stream (phase 1) and the
+    unmarked-site stream (phase 3) while preserving each site's relative
+    popularity.
+    """
+    w = jnp.where(mask, weights, 0.0)
+    cdf = jnp.cumsum(w)
+    cdf = cdf / jnp.maximum(cdf[-1], 1e-30)
+    u = jax.random.uniform(key, (num,), dtype=jnp.float32)
+    idx = jnp.searchsorted(cdf, u, side="right")
+    idx = jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)
+    return idx

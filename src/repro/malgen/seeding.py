@@ -1,0 +1,124 @@
+"""Phase 1 of MalGen: head-node seeding (paper §5, Table 3 "seed" phase).
+
+The head node decides which sites are marked, generates *all* marked-site
+events for the year, and derives the entity mark table:
+
+- a marked-site visit marks the entity with probability ``p_mark`` (paper
+  example: 70%),
+- the mark lands ``mark_delay`` after the visit (paper example: one week),
+- a later marking visit never delays an existing mark; an earlier one moves
+  it earlier ("the date-time of the mark is updated accordingly" — §5). Net:
+  ``mark_time[e] = min over marking visits (ts) + delay``.
+
+The scatterable seed is tiny relative to the data: the PRNG key, the marked
+site set, and the int32 per-entity mark-time table — this is the "seed
+information ... kept in memory" whose footprint Table 3/Figure 3 track.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import NEVER_MARKED, SECONDS_PER_WEEK, SECONDS_PER_YEAR
+from repro.malgen.powerlaw import power_law_weights, sample_sites_masked
+
+
+class MalGenConfig(NamedTuple):
+    num_sites: int = 100_000
+    num_entities: int = 1_000_000
+    marked_site_fraction: float = 0.10   # "The Ghost in the Browser": ~10%
+    alpha: float = 1.2                   # power-law exponent
+    p_mark: float = 0.70                 # paper §5 example
+    mark_delay: int = SECONDS_PER_WEEK   # paper §5 example: one week
+    span_seconds: int = SECONDS_PER_YEAR  # default: one year of data
+    # Fraction of all events that land on marked sites. The paper routes all
+    # marked-site traffic through phase 1; we keep the fraction explicit so
+    # record budgets stay static-shaped.
+    marked_event_fraction: float = 0.10
+
+    @property
+    def num_marked_sites(self) -> int:
+        return max(1, int(self.num_sites * self.marked_site_fraction))
+
+
+class SeedInfo(NamedTuple):
+    """Everything phase 2 scatters to the worker nodes."""
+    key: jax.Array                 # the root PRNG key (regeneration handle)
+    marked_mask: jnp.ndarray       # bool [num_sites]
+    entity_mark_time: jnp.ndarray  # int32 [num_entities]; NEVER_MARKED if not
+    site_weights: jnp.ndarray      # float32 [num_sites] popularity
+    num_marked_events: int         # length of the global marked-event stream
+
+    @property
+    def seed_bytes(self) -> int:
+        """Scatter payload size — the paper's Table 3 memory concern."""
+        return (self.marked_mask.size * 1 + self.entity_mark_time.size * 4
+                + self.site_weights.size * 4 + 32)
+
+
+def make_seed(key: jax.Array, cfg: MalGenConfig,
+              total_records: int) -> SeedInfo:
+    """Phase 1. ``total_records`` is the global record budget; the marked
+    stream gets ``round(total * marked_event_fraction)`` events."""
+    k_perm, k_marked, k_events = jax.random.split(key, 3)
+
+    # Popularity decoupled from site id ordering.
+    perm = jax.random.permutation(k_perm, cfg.num_sites)
+    weights = power_law_weights(cfg.num_sites, cfg.alpha, permutation=perm)
+
+    # Marked sites: a uniform random subset (drive-by exploit sites are not
+    # systematically the most/least popular).
+    marked_ids = jax.random.choice(
+        k_marked, cfg.num_sites, shape=(cfg.num_marked_sites,), replace=False)
+    marked_mask = jnp.zeros((cfg.num_sites,), bool).at[marked_ids].set(True)
+
+    num_marked_events = max(1, int(round(total_records * cfg.marked_event_fraction)))
+    entity_mark_time = _derive_mark_table(
+        k_events, cfg, weights, marked_mask, num_marked_events)
+
+    return SeedInfo(key=key, marked_mask=marked_mask,
+                    entity_mark_time=entity_mark_time,
+                    site_weights=weights,
+                    num_marked_events=num_marked_events)
+
+
+def marked_event_stream(seed: SeedInfo, cfg: MalGenConfig):
+    """Deterministically (re)generate the full global marked-event stream.
+
+    Returns (site, entity, ts) int32 arrays of length num_marked_events.
+    Any node holding the seed can call this — that is the phase-2 scatter
+    trick: bytes moved = seed, not events.
+    """
+    k_events = jax.random.split(seed.key, 3)[2]
+    return _marked_events(k_events, cfg, seed.site_weights, seed.marked_mask,
+                          seed.num_marked_events)
+
+
+def _marked_events(k_events, cfg, weights, marked_mask, num_events):
+    k_site, k_ent, k_ts, _ = jax.random.split(k_events, 4)
+    site = sample_sites_masked(k_site, weights, marked_mask, num_events)
+    entity = jax.random.randint(k_ent, (num_events,), 0, cfg.num_entities,
+                                dtype=jnp.int32)
+    ts = jax.random.randint(k_ts, (num_events,), 0, cfg.span_seconds,
+                            dtype=jnp.int32)
+    return site, entity, ts
+
+
+def _derive_mark_table(k_events, cfg, weights, marked_mask, num_events):
+    site, entity, ts = _marked_events(k_events, cfg, weights, marked_mask,
+                                      num_events)
+    _, _, _, k_bern = jax.random.split(k_events, 4)
+    marks_entity = jax.random.bernoulli(k_bern, cfg.p_mark, (num_events,))
+
+    # earliest marking visit wins; delay applied after the min
+    visit_ts = jnp.where(marks_entity, ts, NEVER_MARKED)
+    earliest = jax.ops.segment_min(visit_ts, entity,
+                                   num_segments=cfg.num_entities)
+    # segment_min fills empty segments with +inf equivalent (dtype max)
+    mark_time = jnp.where(
+        earliest >= NEVER_MARKED - cfg.mark_delay, NEVER_MARKED,
+        earliest + cfg.mark_delay).astype(jnp.int32)
+    return mark_time

@@ -1,0 +1,13 @@
+"""Model zoo: one unified transformer covering the 10 assigned archs.
+
+Substrate layer for the framework — the paper's contribution (MalStone) is
+architecture-agnostic; these models exercise the training/serving planes of
+the same mesh the analytics run on.
+"""
+
+from repro.models.config import ModelConfig
+from repro.models import transformer
+from repro.models import decoding
+from repro.models import steps
+
+__all__ = ["ModelConfig", "transformer", "decoding", "steps"]

@@ -1,0 +1,222 @@
+"""Attention: GQA + RoPE + flash-style chunked softmax, in pure JAX.
+
+Training/prefill attention never materializes the [S, S] score matrix:
+queries are processed in chunks (``lax.map``) and keys stream through an
+online-softmax ``lax.scan`` — the FlashAttention recurrence expressed in
+XLA ops (TPU-friendly: each inner step is one [qc, kc] MXU matmul per
+head group). The baseline scans *all* kv chunks with masking (small HLO,
+~2x wasted FLOPs for causal); the block-causal variant that skips fully
+masked chunks is a §Perf hillclimb (see EXPERIMENTS.md).
+
+Decode attends one query against the cache directly (no chunking): either a
+full cache [B, S_max, Hkv, D] + length, or a ring buffer of ``window`` slots
+for local attention (bounded state — what makes recurrentgemma long_500k
+feasible).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Full-sequence cache (global attention)."""
+    k: jnp.ndarray        # [B, S_max, Hkv, D]
+    v: jnp.ndarray        # [B, S_max, Hkv, D]
+    length: jnp.ndarray   # scalar int32 — valid prefix
+
+
+class RingKVCache(NamedTuple):
+    """Window-bounded ring cache (local attention)."""
+    k: jnp.ndarray        # [B, W, Hkv, D]
+    v: jnp.ndarray        # [B, W, Hkv, D]
+    pos: jnp.ndarray      # [W] int32 absolute positions (-1 = empty)
+    length: jnp.ndarray   # scalar int32 — total tokens seen
+
+
+def _group_q(q: jnp.ndarray, num_kv: int) -> jnp.ndarray:
+    """[B, S, Hq, D] -> [B, S, Hkv, G, D]."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, num_kv, hq // num_kv, d)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, kind: str = "causal",
+                    window: int = 0,
+                    attn_softcap: Optional[float] = None,
+                    q_offset: int = 0,
+                    q_chunk: int = 512,
+                    kv_chunk: int = 1024) -> jnp.ndarray:
+    """Chunked online-softmax attention.
+
+    q: [B, Sq, Hq, D]; k, v: [B, Sk, Hkv, D]; returns [B, Sq, Hq, D].
+    kind: "causal" | "local" (needs window) | "bidir".
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill
+    continuation); 0 for self-attention from scratch.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    scale = d ** -0.5
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    # pad to chunk multiples
+    sq_p = ((sq + qc - 1) // qc) * qc
+    sk_p = ((sk + kc - 1) // kc) * kc
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+
+    g = hq // hkv
+    qg = _group_q(qp, hkv)                      # [B, Sq_p, Hkv, G, D]
+    n_q, n_k = sq_p // qc, sk_p // kc
+
+    q_chunks = qg.reshape(b, n_q, qc, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+    def one_q_chunk(args):
+        qi, q_blk = args                         # q_blk [B, qc, Hkv, G, D]
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(kp, kj * kc, kc, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(vp, kj * kc, kc, axis=1)
+            k_pos = kj * kc + jnp.arange(kc)
+
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, attn_softcap)
+
+            mask = (k_pos[None, :] < sk)         # padding
+            if kind == "causal":
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            elif kind == "local":
+                mask = mask & (k_pos[None, :] <= q_pos[:, None]) \
+                    & (k_pos[None, :] > q_pos[:, None] - window)
+            elif kind != "bidir":
+                raise ValueError(kind)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype),
+                            v_blk, preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(n_k))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # [B, Hkv, G, qc, D] -> [B, qc, Hkv, G, D]
+        return out.transpose(0, 3, 1, 2, 4)
+
+    outs = jax.lax.map(one_q_chunk, (jnp.arange(n_q), q_chunks))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, hq, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Decode-time attention
+# --------------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray, cache: KVCache,
+                     attn_softcap: Optional[float] = None) -> jnp.ndarray:
+    """One-token attention against a full cache.
+
+    q: [B, 1, Hq, D] -> [B, 1, Hq, D].
+    """
+    b, _, hq, d = q.shape
+    hkv = cache.k.shape[2]
+    qg = _group_q(q, hkv)[:, 0]                 # [B, Hkv, G, D]
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, cache.k,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    s = _softcap(s, attn_softcap)
+    k_pos = jnp.arange(cache.k.shape[1])
+    s = jnp.where((k_pos < cache.length)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def decode_attention_ring(q: jnp.ndarray, cache: RingKVCache,
+                          window: int,
+                          attn_softcap: Optional[float] = None
+                          ) -> jnp.ndarray:
+    """One-token local attention against a ring cache (bounded state).
+
+    Call with the *updated* cache (current token already written), matching
+    ``decode_attention``: the current token's position is ``length - 1``.
+    """
+    b, _, hq, d = q.shape
+    hkv = cache.k.shape[2]
+    qg = _group_q(q, hkv)[:, 0]
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, cache.k,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    s = _softcap(s, attn_softcap)
+    cur = cache.length - 1  # absolute position of the current token
+    valid = (cache.pos >= 0) & (cache.pos <= cur) & (cache.pos > cur - window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def update_cache(cache: KVCache, k_new: jnp.ndarray,
+                 v_new: jnp.ndarray) -> KVCache:
+    """Append [B, 1, Hkv, D] at position cache.length."""
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, cache.length, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, cache.length, 1)
+    return KVCache(k=k, v=v, length=cache.length + 1)
+
+
+def update_ring_cache(cache: RingKVCache, k_new: jnp.ndarray,
+                      v_new: jnp.ndarray) -> RingKVCache:
+    """Write [B, 1, Hkv, D] at slot (length % window)."""
+    wnd = cache.k.shape[1]
+    slot = cache.length % wnd
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, 1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, cache.length[None].astype(cache.pos.dtype), slot, 0)
+    return RingKVCache(k=k, v=v, pos=pos, length=cache.length + 1)
+
+
+def empty_cache(batch: int, s_max: int, hkv: int, d: int,
+                dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, s_max, hkv, d), dtype),
+        v=jnp.zeros((batch, s_max, hkv, d), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def empty_ring_cache(batch: int, window: int, hkv: int, d: int,
+                     dtype=jnp.bfloat16) -> RingKVCache:
+    return RingKVCache(
+        k=jnp.zeros((batch, window, hkv, d), dtype),
+        v=jnp.zeros((batch, window, hkv, d), dtype),
+        pos=jnp.full((window,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def prefill_into_cache(cache: KVCache, k: jnp.ndarray,
+                       v: jnp.ndarray, length: int) -> KVCache:
+    """Bulk-write a prefill's K/V (length static) into a fresh cache."""
+    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, 1)
+    return KVCache(k=kc, v=vc,
+                   length=jnp.asarray(length, jnp.int32))

@@ -1,0 +1,401 @@
+"""Serving path: prefill + single-token decode for every architecture.
+
+Cache layout mirrors the parameter layout (stacked [R, ...] leaves for
+scanned layer groups; per-layer lists otherwise). Per-mixer cache kinds:
+
+    attn        -> KVCache (full [B, S_max, Hkv, D] + length)
+    local_attn  -> RingKVCache (window slots — bounded state)
+    rglru       -> RGLRUState (h + conv tail)
+    rwkv6       -> RWKV6State (wkv matrix state + token shifts)
+
+``decode_step`` ordering convention: the cache is updated with the current
+token's K/V (or recurrent state) *first*, then attention/readout runs
+against the updated cache — so a fresh decode at position L attends to
+positions [0, L] inclusive.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import mlp as mlp_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+from repro.models.transformer import (
+    _attn_apply_train,
+    _dtype,
+    _embed_inputs,
+    _encode,
+    _norm,
+)
+
+
+class LayerCache(NamedTuple):
+    """Per-layer decode state. Exactly one field is populated per mixer
+    kind; unused fields hold size-zero placeholders so the pytree structure
+    stays uniform inside scanned layer groups of the same kind."""
+    kind: str
+    attn: Any = None        # KVCache | RingKVCache
+    rglru: Any = None       # RGLRUState
+    rwkv: Any = None        # RWKV6State fields (s, tm_shift)
+    cmix_shift: Any = None  # [B, D] rwkv channel-mix shift
+    cross_kv: Any = None    # (k, v) static encoder projections
+
+
+def _empty_layer_cache(cfg: ModelConfig, mixer: str, batch: int,
+                       max_len: int, dtype) -> dict:
+    hd, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    if mixer == "attn":
+        return {"kind_attn": attn_lib.empty_cache(batch, max_len, hkv, hd,
+                                                  dtype)}
+    if mixer == "local_attn":
+        wnd = min(cfg.local_window, max_len)
+        return {"kind_local": attn_lib.empty_ring_cache(batch, wnd, hkv, hd,
+                                                        dtype)}
+    if mixer == "rglru":
+        return {"kind_rglru": rglru_lib.rglru_empty_state(
+            batch, cfg.lru_width or cfg.d_model, cfg.conv_width, dtype)}
+    if mixer == "rwkv6":
+        st = rwkv_lib.rwkv6_empty_state(batch, cfg.d_model,
+                                        cfg.rwkv_head_size)
+        return {"kind_rwkv": st}
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree matching the layer layout of init_params."""
+    dtype = _dtype(cfg.param_dtype)
+    period = cfg.uniform_period
+
+    def one(layer):
+        c = _empty_layer_cache(cfg, cfg.mixer_of(layer), batch, max_len,
+                               dtype)
+        if cfg.mlp_of(layer) == "rwkv_cmix":
+            c["cmix_shift"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+        return c
+
+    if period < cfg.num_layers:
+        n_rep = cfg.num_layers // period
+        return [jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[one(s) for _ in range(n_rep)])
+                for s in range(period)]
+    return [one(i) for i in range(cfg.num_layers)]
+
+
+# --------------------------------------------------------------------------
+# Per-block decode step
+# --------------------------------------------------------------------------
+
+def _attn_decode(p, cfg: ModelConfig, x, cache, mixer: str):
+    b = x.shape[0]
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = L.dense(p["wq"], x).reshape(b, 1, hq, hd)
+    k = L.dense(p["wk"], x).reshape(b, 1, hkv, hd)
+    v = L.dense(p["wv"], x).reshape(b, 1, hkv, hd)
+    pos = cache.length  # current token's absolute position
+    if cfg.use_rope:
+        q = L.apply_rope(q, pos[None], cfg.rope_theta)
+        k = L.apply_rope(k, pos[None], cfg.rope_theta)
+    if mixer == "attn":
+        cache = attn_lib.update_cache(cache, k, v)
+        out = attn_lib.decode_attention(q, cache, cfg.attn_softcap)
+    else:
+        cache = attn_lib.update_ring_cache(cache, k, v)
+        out = attn_lib.decode_attention_ring(q, cache, cfg.local_window,
+                                             cfg.attn_softcap)
+    y = L.dense(p["wo"], out.reshape(b, 1, hq * hd))
+    return y, cache
+
+
+def _cross_decode(p, cfg: ModelConfig, x, cross_kv):
+    b = x.shape[0]
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    k, v = cross_kv
+    sk = k.shape[1]
+    q = L.dense(p["wq"], x).reshape(b, 1, hq, hd)
+    cache = attn_lib.KVCache(k=k.reshape(b, sk, hkv, hd),
+                             v=v.reshape(b, sk, hkv, hd),
+                             length=jnp.asarray(sk, jnp.int32))
+    out = attn_lib.decode_attention(q, cache, cfg.attn_softcap)
+    return L.dense(p["wo"], out.reshape(b, 1, hq * hd))
+
+
+def block_decode(p, cfg: ModelConfig, layer: int, x, cache: dict,
+                 cross_kv=None):
+    mixer = cfg.mixer_of(layer)
+    mlp_kind = cfg.mlp_of(layer)
+    new_cache = dict(cache)
+
+    h = _norm(cfg, p["norm1"], x)
+    if mixer in ("attn", "local_attn"):
+        key = "kind_attn" if mixer == "attn" else "kind_local"
+        y, new_cache[key] = _attn_decode(p["mixer"], cfg, h, cache[key],
+                                         mixer)
+    elif mixer == "rglru":
+        y, new_cache["kind_rglru"] = rglru_lib.rglru_decode_step(
+            p["mixer"], h, cache["kind_rglru"])
+    elif mixer == "rwkv6":
+        st = cache["kind_rwkv"]
+        y, new_s, new_shift = rwkv_lib.rwkv6_time_mix_step(
+            p["mixer"], h, st.s, st.tm_shift, cfg.rwkv_head_size)
+        new_cache["kind_rwkv"] = st._replace(s=new_s, tm_shift=new_shift)
+    if cfg.use_post_norm:
+        y = _norm(cfg, p["post_norm1"], y)
+    x = x + y
+
+    if cross_kv is not None:
+        h = _norm(cfg, p["norm_cross"], x)
+        x = x + _cross_decode(p["cross"], cfg, h, cross_kv)
+
+    h = _norm(cfg, p["norm2"], x)
+    if mlp_kind == "moe":
+        y = mlp_lib.moe_apply(
+            p["mlp"], h, num_experts=cfg.num_experts,
+            top_k=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor,
+            group_size=min(cfg.moe_group_size, h.shape[0] * h.shape[1]))
+    elif mlp_kind == "rwkv_cmix":
+        y, new_shift = rwkv_lib.rwkv6_cmix(p["mlp"], h,
+                                           cache["cmix_shift"])
+        new_cache["cmix_shift"] = new_shift
+    else:
+        y = mlp_lib.mlp_apply(p["mlp"], h, mlp_kind)
+    if cfg.use_post_norm:
+        y = _norm(cfg, p["post_norm2"], y)
+    return x + y, new_cache
+
+
+# --------------------------------------------------------------------------
+# decode_step / prefill entry points
+# --------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, token: jnp.ndarray, cache,
+                enc_out: Optional[jnp.ndarray] = None):
+    """token: [B, 1] int32. Returns (logits [B, 1, Vp] f32, new cache).
+
+    For enc-dec models pass ``enc_out`` (encoder activations [B, T, D]);
+    cross K/V are recomputed per layer from it (cheap at decode: one [T, D]
+    matmul per layer — or prefill can bake them, see ``prefill``).
+    """
+    x = L.embed(params["embed"], token)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.use_abs_pos and not cfg.is_encoder_decoder:
+        pos = _cache_length(cfg, cache)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos"]["pos"], pos, 1, axis=0)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    period = cfg.uniform_period
+    new_cache = []
+    if period < cfg.num_layers:
+        # one scan over repeats; each step applies the full pattern period
+        # in order (layer i = slot i % period, repeat i // period — matching
+        # the training forward's interleaving)
+        def body(x, xs):
+            new = []
+            for s in range(period):
+                lp_i, lc_i = xs[s]
+                ckv = None
+                if enc_out is not None:
+                    ckv = (L.dense(lp_i["cross"]["wk"], enc_out),
+                           L.dense(lp_i["cross"]["wv"], enc_out))
+                x, nc = block_decode(lp_i, cfg, s, x, lc_i, cross_kv=ckv)
+                new.append(nc)
+            return x, tuple(new)
+
+        xs = tuple((params["layers"][s], cache[s]) for s in range(period))
+        x, stacked_new = jax.lax.scan(body, x, xs)
+        new_cache = list(stacked_new)
+    else:
+        for i, (lp, lc) in enumerate(zip(params["layers"], cache)):
+            ckv = None
+            if enc_out is not None:
+                ckv = (L.dense(lp["cross"]["wk"], enc_out),
+                       L.dense(lp["cross"]["wv"], enc_out))
+            x, nc = block_decode(lp, cfg, i, x, lc, cross_kv=ckv)
+            new_cache.append(nc)
+
+    x = _norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(head, x, cfg.logit_softcap)
+    return constrain(logits, ("batch", "seq", "vocab")), new_cache
+
+
+def _cache_length(cfg: ModelConfig, cache) -> jnp.ndarray:
+    """Scalar count of tokens already in the cache (before this step)."""
+    leaf = cache[0]
+    for key in ("kind_attn", "kind_local"):
+        if key in leaf:
+            ln = leaf[key].length
+            return (ln[0] if ln.ndim else ln).astype(jnp.int32)
+    # recurrent-only models don't track position (no rope/abs pos needed)
+    return jnp.zeros((), jnp.int32)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Run the prompt, build the cache — FUSED single pass (K/V and
+    recurrent states captured during the forward; see
+    ``transformer.forward_with_cache``).
+
+    Returns (last_logits [B, 1, Vp], cache, enc_out or None).
+    """
+    from repro.models import transformer as T
+
+    _check_room(cfg, batch, max_len)
+    logits, cache, enc_out = T.forward_with_cache(params, cfg, batch,
+                                                  max_len)
+    return logits[:, -1:], cache, enc_out
+
+
+def prefill_reference(params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Replay-based prefill oracle (forward for logits + per-layer replay
+    for states). Quadratic in passes but independently derived — tests
+    assert the fused path matches this."""
+    from repro.models import transformer as T
+
+    _check_room(cfg, batch, max_len)
+    logits = T.forward(params, cfg, batch)
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
+    cache = _fill_cache(params, cfg, batch, cache)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"])
+    return logits[:, -1:], cache, enc_out
+
+
+def _check_room(cfg: ModelConfig, batch: dict, max_len: int):
+    prompt_len = batch["tokens"].shape[1]
+    if cfg.family == "vlm" and "patches" in batch:
+        prompt_len += batch["patches"].shape[1]
+    assert max_len > prompt_len, (
+        f"cache max_len={max_len} leaves no room to decode beyond the "
+        f"prompt ({prompt_len} positions incl. any patch/frame prefix)")
+
+
+def _fill_cache(params, cfg: ModelConfig, batch: dict, cache):
+    """Recompute per-layer inputs and write prefill K/V + recurrent states.
+
+    This recomputes the forward pass once more; a fused forward+cache write
+    is a §Perf optimization candidate, but the semantics (and tests) live
+    here. Works for both stacked and per-layer layouts by flattening to
+    per-layer processing.
+    """
+    x, _ = _embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    period = cfg.uniform_period
+    stacked = period < cfg.num_layers
+
+    def layer_params(i):
+        if stacked:
+            slot, rep = i % period, i // period
+            return jax.tree.map(lambda a: a[rep], params["layers"][slot])
+        return params["layers"][i]
+
+    def set_layer_cache(i, lc):
+        if stacked:
+            slot, rep = i % period, i // period
+            cache[slot] = jax.tree.map(
+                lambda full, new: full.at[rep].set(new), cache[slot], lc)
+        else:
+            cache[i] = lc
+
+    enc_out = _encode(params, cfg, batch["frames"]) \
+        if cfg.is_encoder_decoder else None
+
+    from repro.models.transformer import block_apply
+    for i in range(cfg.num_layers):
+        lp = layer_params(i)
+        if stacked:
+            lc = dict(jax.tree.map(lambda a: a[i // period],
+                                   cache[i % period]))
+        else:
+            lc = dict(cache[i])
+        mixer = cfg.mixer_of(i)
+        h = _norm(cfg, lp["norm1"], x)
+        if mixer in ("attn", "local_attn"):
+            key = "kind_attn" if mixer == "attn" else "kind_local"
+            _, (k, v) = _attn_apply_train(lp["mixer"], cfg, h, mixer)
+            if mixer == "attn":
+                lc[key] = attn_lib.prefill_into_cache(lc[key], k, v, s)
+            else:
+                # ring invariant: position p lives at slot p % window
+                wnd = lc[key].k.shape[1]
+                take = min(wnd, s)
+                positions = jnp.arange(s - take, s)
+                slots = positions % wnd
+                pos = jnp.full((wnd,), -1, jnp.int32).at[slots].set(positions)
+                lc[key] = attn_lib.RingKVCache(
+                    k=lc[key].k.at[:, slots].set(k[:, s - take:]),
+                    v=lc[key].v.at[:, slots].set(v[:, s - take:]),
+                    pos=pos,
+                    length=jnp.asarray(s, jnp.int32))
+        elif mixer == "rglru":
+            st = _rglru_prefill_state(lp["mixer"], h, cfg)
+            lc["kind_rglru"] = st
+        elif mixer == "rwkv6":
+            st = _rwkv_prefill_state(lp["mixer"], h, cfg,
+                                     lc["kind_rwkv"])
+            lc["kind_rwkv"] = st
+        # advance x through the full block for the next layer's input
+        ckv = None
+        if enc_out is not None:
+            ckv = (L.dense(lp["cross"]["wk"], enc_out),
+                   L.dense(lp["cross"]["wv"], enc_out))
+        x_next = block_apply(lp, cfg, i, x, enc_kv=ckv)
+        if cfg.mlp_of(i) == "rwkv_cmix":
+            # channel-mix shift = last token of its input stream
+            x_mid = x + _mixer_out_only(lp, cfg, i, x)
+            lc["cmix_shift"] = _norm(cfg, lp["norm2"], x_mid)[:, -1] \
+                .astype(jnp.float32)
+        x = x_next
+        set_layer_cache(i, lc)
+    return cache
+
+
+def _mixer_out_only(lp, cfg, layer, x):
+    mixer = cfg.mixer_of(layer)
+    h = _norm(cfg, lp["norm1"], x)
+    if mixer in ("attn", "local_attn", "bidir_attn"):
+        y, _ = _attn_apply_train(lp["mixer"], cfg, h, mixer)
+    elif mixer == "rglru":
+        y = rglru_lib.rglru_block(lp["mixer"], h)
+    else:
+        y = rwkv_lib.rwkv6_time_mix(lp["mixer"], h, cfg.rwkv_head_size)
+    if cfg.use_post_norm:
+        y = _norm(cfg, lp["post_norm1"], y)
+    return y
+
+
+def _rglru_prefill_state(p, h, cfg: ModelConfig):
+    """Final RG-LRU state after consuming h [B, S, D]."""
+    width = cfg.lru_width or cfg.d_model
+    st = rglru_lib.rglru_empty_state(h.shape[0], width, cfg.conv_width,
+                                     _dtype(cfg.param_dtype))
+
+    def step(carry, x_t):
+        _, carry2 = rglru_lib.rglru_decode_step(p, x_t[:, None], carry)
+        return carry2, None
+
+    st, _ = jax.lax.scan(step, st, h.transpose(1, 0, 2))
+    return st
+
+
+def _rwkv_prefill_state(p, h, cfg: ModelConfig, st):
+    def step(carry, x_t):
+        s, shift = carry
+        _, s2, shift2 = rwkv_lib.rwkv6_time_mix_step(
+            p, x_t[:, None], s, shift, cfg.rwkv_head_size)
+        return (s2, shift2), None
+
+    (s2, shift2), _ = jax.lax.scan(step, (st.s, st.tm_shift),
+                                   h.transpose(1, 0, 2))
+    return st._replace(s=s2, tm_shift=shift2)

@@ -1,0 +1,114 @@
+"""Primitive layers: norms, dense projections, RoPE, embeddings.
+
+No flax in this environment: a "module" is ``init_*(key, ...) -> params``
+plus an ``apply``-style pure function. Every param leaf is paired (in a
+parallel tree built by the init functions) with a tuple of *logical axis
+names* consumed by models/sharding.py.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Parallel-tree container: params["w"], axes["w"] = ("embed", "ffn")
+Params = dict
+Axes = dict
+
+
+def dense_init(key, d_in: int, d_out: int, axes: tuple[str, str],
+               dtype=jnp.bfloat16, bias: bool = False,
+               bias_axis: Optional[str] = None):
+    scale = (1.0 / d_in) ** 0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        a["b"] = (bias_axis or axes[1],)
+    return p, a
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16):
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    e = jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)
+    return {"table": e.astype(dtype)}, {"table": ("vocab", "embed")}
+
+
+def embed(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][ids]
+
+
+def unembed(p: Params, x: jnp.ndarray,
+            softcap: Optional[float] = None) -> jnp.ndarray:
+    logits = jnp.einsum("...d,vd->...v", x, p["table"])
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def abs_pos_init(key, max_pos: int, d: int, dtype=jnp.bfloat16):
+    e = jax.random.normal(key, (max_pos, d), jnp.float32) * 0.02
+    return {"pos": e.astype(dtype)}, {"pos": (None, "embed")}
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]            # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap

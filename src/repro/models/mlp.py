@@ -1,0 +1,145 @@
+"""Feed-forward blocks: gated/plain MLPs and GShard-style MoE.
+
+The MoE uses the TPU-canonical one-hot einsum dispatch (GShard): tokens are
+bucketed into groups of ``moe_group_size``; within each group every token's
+top-k experts get a capacity-bounded slot; dispatch/combine are dense
+[g, E, C] tensors contracted on the MXU. Capacity overflow drops tokens
+(standard GShard semantics) and is reported in the metrics dict so tests and
+the trainer can watch it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        p, a = {}, {}
+        p["gate"], a["gate"] = dense_init(ks[0], d_model, d_ff,
+                                          ("embed", "ffn"), dtype)
+        p["up"], a["up"] = dense_init(ks[1], d_model, d_ff,
+                                      ("embed", "ffn"), dtype)
+        p["down"], a["down"] = dense_init(ks[2], d_ff, d_model,
+                                          ("ffn", "embed"), dtype)
+        return p, a
+    if kind == "gelu":
+        p, a = {}, {}
+        p["up"], a["up"] = dense_init(ks[0], d_model, d_ff,
+                                      ("embed", "ffn"), dtype, bias=True)
+        p["down"], a["down"] = dense_init(ks[1], d_ff, d_model,
+                                          ("ffn", "embed"), dtype, bias=True)
+        return p, a
+    raise ValueError(kind)
+
+
+def mlp_apply(p, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else \
+            (lambda z: jax.nn.gelu(z, approximate=True))
+        h = act(x @ p["gate"]["w"]) * (x @ p["up"]["w"])
+        return h @ p["down"]["w"]
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ p["up"]["w"] + p["up"]["b"], approximate=True)
+        return h @ p["down"]["w"] + p["down"]["b"]
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int,
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    scale = (1.0 / d_model) ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, num_experts),
+                                     jnp.float32) * scale).astype(jnp.float32),
+        "gate": (jax.random.normal(ks[1], (num_experts, d_model, d_ff),
+                                   jnp.float32) * scale).astype(dtype),
+        "up": (jax.random.normal(ks[2], (num_experts, d_model, d_ff),
+                                 jnp.float32) * scale).astype(dtype),
+        "down": (jax.random.normal(ks[3], (num_experts, d_ff, d_model),
+                                   jnp.float32) * (1.0 / d_ff) ** 0.5
+                 ).astype(dtype),
+    }
+    a = {
+        "router": ("embed", "experts"),
+        "gate": ("experts", "embed", "ffn"),
+        "up": ("experts", "embed", "ffn"),
+        "down": ("experts", "ffn", "embed"),
+    }
+    return p, a
+
+
+def moe_apply(p, x: jnp.ndarray, *, num_experts: int, top_k: int,
+              capacity_factor: float = 1.25, group_size: int = 256,
+              return_metrics: bool = False):
+    """GShard top-k dispatch. x: [B, S, D] -> [B, S, D].
+
+    Tokens are reshaped into groups of ``group_size``; each group gets an
+    expert capacity C = ceil(group * top_k * cf / E). Dropped-token fraction
+    and router load stats are returned when ``return_metrics``.
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = min(group_size, t)
+    assert t % g == 0, (t, g)
+    n = t // g
+    xg = x.reshape(n, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)     # [n, g, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(g * top_k * capacity_factor / num_experts))
+
+    # Sequential top-k slot assignment (k=0 has priority, GShard-style).
+    dispatch = jnp.zeros((n, g, num_experts, capacity), jnp.bfloat16)
+    combine = jnp.zeros((n, g, num_experts, capacity), jnp.float32)
+    prior = jnp.zeros((n, num_experts), jnp.int32)          # used slots
+    dropped = jnp.zeros((), jnp.float32)
+    for kk in range(top_k):
+        oh = jax.nn.one_hot(expert_idx[..., kk], num_experts,
+                            dtype=jnp.int32)                # [n, g, E]
+        pos = jnp.cumsum(oh, axis=1) - 1 + prior[:, None, :]
+        keep = (pos < capacity) & (oh > 0)
+        dropped = dropped + jnp.sum((oh > 0) & ~keep)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity),
+                                capacity, dtype=jnp.float32)  # [n,g,E,C]
+        sel = pos_oh * oh[..., None].astype(jnp.float32)
+        dispatch = dispatch + sel.astype(jnp.bfloat16)
+        combine = combine + sel * gate_vals[..., kk][..., None, None]
+        prior = prior + jnp.sum(oh * keep, axis=1)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch,
+                           xg.astype(jnp.bfloat16))
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", expert_in, p["gate"])) \
+        * jnp.einsum("necd,edf->necf", expert_in, p["up"])
+    expert_out = jnp.einsum("necf,efd->necd", h, p["down"])
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(jnp.bfloat16),
+                   expert_out)
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    if not return_metrics:
+        return y
+    load = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], num_experts),
+                    axis=(0, 1))
+    # Switch-style load-balance loss: E * sum(load_e * mean_prob_e)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux_loss = num_experts * jnp.sum(load * mean_prob)
+    metrics = {
+        "moe_dropped_frac": dropped / (t * top_k),
+        "moe_aux_loss": aux_loss,
+        "moe_top1_load_max": jnp.max(load),
+    }
+    return y, metrics

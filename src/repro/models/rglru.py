@@ -1,0 +1,152 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv1d + RG-LRU.
+
+(arXiv:2402.19427.) The block:
+
+    x -> [linear -> gelu]───────────────┐
+    x -> [linear -> conv1d(4) -> RG-LRU]─⊙──> linear -> out
+
+RG-LRU recurrence (c = 8):
+
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` (the recurrence is linear in h,
+so it parallelizes O(log S) — the TPU-native choice vs. a sequential scan);
+decode is a single fused step. State is O(lru_width) per token stream —
+this is what makes long_500k decode feasible for this family.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+RGLRU_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray          # [B, W] recurrent state
+    conv: jnp.ndarray       # [B, conv_width - 1, W] trailing inputs
+
+
+def rglru_init(key, d_model: int, width: int, conv_width: int = 4,
+               dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["in_x"], a["in_x"] = dense_init(ks[0], d_model, width,
+                                      ("embed", "ffn"), dtype)
+    p["in_gate"], a["in_gate"] = dense_init(ks[1], d_model, width,
+                                            ("embed", "ffn"), dtype)
+    p["gate_a"], a["gate_a"] = dense_init(ks[2], width, width,
+                                          ("ffn", "ffn2"), dtype, bias=True)
+    p["gate_x"], a["gate_x"] = dense_init(ks[3], width, width,
+                                          ("ffn", "ffn2"), dtype, bias=True)
+    p["out"], a["out"] = dense_init(ks[4], width, d_model,
+                                    ("ffn", "embed"), dtype)
+    # Lambda init so a (at r=1) spans ~(0.9, 0.999) as in the paper:
+    # a = exp(-c * softplus(Lambda)) => Lambda = log(exp(-log(a)/c) - 1)
+    lam = jax.random.uniform(ks[5], (width,), jnp.float32, 0.9, 0.999)
+    p["lam"] = jnp.log(jnp.exp(-jnp.log(lam) / RGLRU_C) - 1.0) \
+        .astype(jnp.float32)
+    a["lam"] = ("ffn",)
+    p["conv_w"] = jnp.zeros((conv_width, width), dtype) \
+        .at[-1].set(1.0)  # identity-ish init: current token passes through
+    a["conv_w"] = (None, "ffn")
+    p["conv_b"] = jnp.zeros((width,), dtype)
+    a["conv_b"] = ("ffn",)
+    return p, a
+
+
+def _causal_conv(p, x: jnp.ndarray, history: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: [B, S, W]; history: [B, cw-1, W] or None.
+
+    conv_w[j] multiplies x_{t - (cw-1) + j} (conv_w[-1] = current token).
+    """
+    cw = p["conv_w"].shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = jnp.zeros_like(x)
+    # xp[:, j : j+S] holds x_{t-(cw-1-j)}; conv_w[j] is its tap (conv_w[-1]
+    # multiplies the current token — matches the decode path's einsum).
+    for j in range(cw):
+        out = out + xp[:, j:j + x.shape[1]] * p["conv_w"][j]
+    return out + p["conv_b"]
+
+
+def _log_a(p, gated_x: jnp.ndarray) -> jnp.ndarray:
+    r = jax.nn.sigmoid(
+        (gated_x @ p["gate_a"]["w"] + p["gate_a"]["b"]).astype(jnp.float32))
+    return -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+
+
+def rglru_block(p, x: jnp.ndarray, return_state: bool = False):
+    """Training/prefill forward. x: [B, S, D] -> [B, S, D].
+
+    ``return_state=True`` additionally returns the RGLRUState after the last
+    token (fused prefill — no replay needed)."""
+    gate_branch = jax.nn.gelu(x @ p["in_gate"]["w"], approximate=True)
+    u_pre = x @ p["in_x"]["w"]
+    u = _causal_conv(p, u_pre)
+
+    log_a = _log_a(p, u)                                 # [B, S, W] f32
+    a = jnp.exp(log_a)
+    i = jax.nn.sigmoid(
+        (u @ p["gate_x"]["w"] + p["gate_x"]["b"]).astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate_branch) @ p["out"]["w"]
+    if not return_state:
+        return y
+    cw = p["conv_w"].shape[0]
+    s = x.shape[1]
+    if s >= cw - 1:
+        tail = u_pre[:, s - (cw - 1):]
+    else:
+        tail = jnp.concatenate(
+            [jnp.zeros((x.shape[0], cw - 1 - s, u_pre.shape[-1]),
+                       u_pre.dtype), u_pre], axis=1)
+    state = RGLRUState(h=h[:, -1], conv=tail)
+    return y, state
+
+
+def rglru_decode_step(p, x: jnp.ndarray, state: RGLRUState):
+    """x: [B, 1, D] -> ([B, 1, D], new state)."""
+    gate_branch = jax.nn.gelu(x @ p["in_gate"]["w"], approximate=True)
+    u_t = (x @ p["in_x"]["w"])[:, 0]                       # [B, W]
+
+    cw = p["conv_w"].shape[0]
+    xp = jnp.concatenate([state.conv, u_t[:, None]], axis=1)  # [B, cw, W]
+    u_c = jnp.einsum("bjw,jw->bw", xp, p["conv_w"]) + p["conv_b"]
+    new_conv = xp[:, 1:]
+
+    log_a = _log_a(p, u_c)
+    a = jnp.exp(log_a)
+    i = jax.nn.sigmoid(
+        (u_c @ p["gate_x"]["w"] + p["gate_x"]["b"]).astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u_c.astype(jnp.float32))
+    h = a * state.h + b
+
+    y = (h.astype(x.dtype)[:, None] * gate_branch) @ p["out"]["w"]
+    return y, RGLRUState(h=h, conv=new_conv)
+
+
+def rglru_empty_state(batch: int, width: int, conv_width: int = 4,
+                      dtype=jnp.bfloat16) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, width), jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, width), dtype))

@@ -1,0 +1,218 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free token mixing with
+data-dependent per-channel decay.
+
+Time-mix (per head, head_size hs; state S is an [hs_k, hs_v] matrix):
+
+    y_t = r_t @ (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with r/k/v/g and the decay w all produced through the "ddlerp" token-shift
+low-rank interpolation of (x_t, x_{t-1}). Training runs a sequential
+``lax.scan`` over time carrying S (O(1) memory in S — the chunk-parallel
+formulation is a §Perf hillclimb candidate); decode is one step. State per
+stream is O(H * hs^2 + 2d), independent of context length -> long_500k runs.
+
+Channel-mix is RWKV's squared-ReLU FFN with token-shift and a receptance
+gate; it plugs into the transformer as mlp kind "rwkv_cmix".
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+LORA_DIM = 32
+DECAY_LORA_DIM = 64
+
+
+class RWKV6State(NamedTuple):
+    s: jnp.ndarray         # [B, H, hs, hs] wkv state (f32)
+    tm_shift: jnp.ndarray  # [B, D] last token seen by time-mix
+    cm_shift: jnp.ndarray  # [B, D] last token seen by channel-mix
+
+
+def rwkv6_init(key, d_model: int, head_size: int, dtype=jnp.bfloat16):
+    assert d_model % head_size == 0
+    h = d_model // head_size
+    ks = jax.random.split(key, 12)
+    p, a = {}, {}
+    for i, z in enumerate(("r", "k", "v", "g")):
+        p[f"w_{z}"], a[f"w_{z}"] = dense_init(
+            ks[i], d_model, d_model, ("embed", "qkv_dim"), dtype)
+    p["w_o"], a["w_o"] = dense_init(ks[4], d_model, d_model,
+                                    ("qkv_dim", "embed"), dtype)
+    # token-shift base mixes: maa_x plus one per stream (w,k,v,r,g)
+    for i, z in enumerate(("x", "w", "k", "v", "r", "g")):
+        p[f"maa_{z}"] = jnp.zeros((d_model,), jnp.float32)
+        a[f"maa_{z}"] = ("embed",)
+    # ddlerp low-rank adapters: [D, 5*LORA] and [5, LORA, D]
+    p["tm_w1"] = (jax.random.normal(ks[5], (d_model, 5 * LORA_DIM),
+                                    jnp.float32) * 1e-2).astype(dtype)
+    a["tm_w1"] = ("embed", None)
+    p["tm_w2"] = (jax.random.normal(ks[6], (5, LORA_DIM, d_model),
+                                    jnp.float32) * 1e-2).astype(dtype)
+    a["tm_w2"] = (None, None, "embed")
+    # data-dependent decay lora + base
+    p["td_w1"] = (jax.random.normal(ks[7], (d_model, DECAY_LORA_DIM),
+                                    jnp.float32) * 1e-2).astype(dtype)
+    a["td_w1"] = ("embed", None)
+    p["td_w2"] = (jax.random.normal(ks[8], (DECAY_LORA_DIM, d_model),
+                                    jnp.float32) * 1e-2).astype(dtype)
+    a["td_w2"] = (None, "embed")
+    p["decay_base"] = jnp.full((d_model,), -1.0, jnp.float32)
+    a["decay_base"] = ("embed",)
+    p["bonus_u"] = (jax.random.normal(ks[9], (h, head_size), jnp.float32)
+                    * 1e-2).astype(jnp.float32)
+    a["bonus_u"] = ("heads", None)
+    # per-head group norm on the wkv output
+    p["ln_x_scale"] = jnp.ones((d_model,), jnp.float32)
+    a["ln_x_scale"] = ("embed",)
+    p["ln_x_bias"] = jnp.zeros((d_model,), jnp.float32)
+    a["ln_x_bias"] = ("embed",)
+    return p, a
+
+
+def _ddlerp(p, x: jnp.ndarray, sx: jnp.ndarray):
+    """Token-shift interpolation -> the five mixed streams (w,k,v,r,g).
+
+    x: [B, S, D]; sx = x_{t-1} - x_t. Returns dict z -> [B, S, D].
+    """
+    xxx = x + sx * p["maa_x"]
+    lora = jnp.tanh(xxx @ p["tm_w1"])                       # [B,S,5*L]
+    b, s, _ = lora.shape
+    lora = lora.reshape(b, s, 5, LORA_DIM)
+    mixes = jnp.einsum("bszl,zld->bszd", lora, p["tm_w2"])  # [B,S,5,D]
+    out = {}
+    for i, z in enumerate(("w", "k", "v", "r", "g")):
+        out[z] = x + sx * (p[f"maa_{z}"] + mixes[:, :, i].astype(jnp.float32))
+    return out
+
+
+def _project(p, streams, h: int, hs: int):
+    b, s, _ = streams["r"].shape
+    dt = p["w_r"]["w"].dtype
+    r = (streams["r"].astype(dt) @ p["w_r"]["w"]).reshape(b, s, h, hs)
+    k = (streams["k"].astype(dt) @ p["w_k"]["w"]).reshape(b, s, h, hs)
+    v = (streams["v"].astype(dt) @ p["w_v"]["w"]).reshape(b, s, h, hs)
+    g = jax.nn.silu(streams["g"].astype(dt) @ p["w_g"]["w"])
+    ww = p["decay_base"] + (jnp.tanh(streams["w"].astype(dt) @ p["td_w1"])
+                            @ p["td_w2"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, s, h, hs)          # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _group_norm(p, y: jnp.ndarray, h: int, hs: int, eps=1e-5):
+    """Per-head LayerNorm over hs (RWKV's ln_x). y: [B, S, D]."""
+    b, s, d = y.shape
+    yh = y.reshape(b, s, h, hs).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(b, s, d) * p["ln_x_scale"] + p["ln_x_bias"])
+
+
+def rwkv6_time_mix(p, x: jnp.ndarray, head_size: int,
+                   return_state: bool = False):
+    """Training/prefill forward. x: [B, S, D] -> [B, S, D].
+
+    ``return_state=True`` also returns (final_S, final_tm_shift) for fused
+    prefill."""
+    b, s, d = x.shape
+    h = d // head_size
+    xf = x.astype(jnp.float32)
+    prev = jnp.pad(xf, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    streams = _ddlerp(p, xf, prev - xf)
+    r, k, v, g, w = _project(p, streams, h, head_size)
+
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs                         # [B, H, hs]
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)          # [B,H,hs,hs]
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + p["bonus_u"][None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    seq = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+           k.transpose(1, 0, 2, 3).astype(jnp.float32),
+           v.transpose(1, 0, 2, 3).astype(jnp.float32),
+           w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    s0 = jnp.zeros((b, h, head_size, head_size), jnp.float32)
+    s_final, ys = jax.lax.scan(step, s0, seq)               # [S, B, H, hs]
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    y = _group_norm(p, y, h, head_size)
+    out = ((y * g.astype(jnp.float32)).astype(x.dtype) @ p["w_o"]["w"])
+    if not return_state:
+        return out
+    return out, (s_final, xf[:, -1])
+
+
+def rwkv6_time_mix_step(p, x: jnp.ndarray, s_state: jnp.ndarray,
+                        shift: jnp.ndarray, head_size: int):
+    """Decode step. x: [B, 1, D]; returns (y [B,1,D], new_s, new_shift)."""
+    b, _, d = x.shape
+    h = d // head_size
+    xf = x.astype(jnp.float32)
+    prev = shift[:, None]                                   # [B, 1, D]
+    streams = _ddlerp(p, xf, prev - xf)
+    r, k, v, g, w = _project(p, streams, h, head_size)
+    r_t, k_t, v_t, w_t = (z[:, 0].astype(jnp.float32) for z in (r, k, v, w))
+    kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+    y = jnp.einsum("bhi,bhij->bhj", r_t,
+                   s_state + p["bonus_u"][None, :, :, None] * kv)
+    new_s = w_t[..., None] * s_state + kv
+    y = y.reshape(b, 1, d)
+    y = _group_norm(p, y, h, head_size)
+    out = (y * g.astype(jnp.float32)).astype(x.dtype) @ p["w_o"]["w"]
+    return out, new_s, xf[:, 0]
+
+
+# --------------------------------------------------------------------------
+# Channel mix
+# --------------------------------------------------------------------------
+
+def rwkv6_cmix_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["w_k"], a["w_k"] = dense_init(ks[0], d_model, d_ff,
+                                    ("embed", "ffn"), dtype)
+    p["w_v"], a["w_v"] = dense_init(ks[1], d_ff, d_model,
+                                    ("ffn", "embed"), dtype)
+    p["w_r"], a["w_r"] = dense_init(ks[2], d_model, d_model,
+                                    ("embed", "qkv_dim"), dtype)
+    p["maa_k"] = jnp.zeros((d_model,), jnp.float32)
+    a["maa_k"] = ("embed",)
+    p["maa_r"] = jnp.zeros((d_model,), jnp.float32)
+    a["maa_r"] = ("embed",)
+    return p, a
+
+
+def rwkv6_cmix(p, x: jnp.ndarray, shift: jnp.ndarray | None = None):
+    """x: [B, S, D]. shift: [B, D] previous token (decode) or None (train).
+
+    Returns (out, last_token) so decode can carry the shift state.
+    """
+    xf = x.astype(jnp.float32)
+    if shift is None:
+        prev = jnp.pad(xf, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = shift[:, None]
+    sx = prev - xf
+    xk = (xf + sx * p["maa_k"]).astype(x.dtype)
+    xr = (xf + sx * p["maa_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]["w"]))
+    out = jax.nn.sigmoid((xr @ p["w_r"]["w"]).astype(jnp.float32)) \
+        * (kk @ p["w_v"]["w"]).astype(jnp.float32)
+    return out.astype(x.dtype), xf[:, -1]
+
+
+def rwkv6_empty_state(batch: int, d_model: int, head_size: int
+                      ) -> RWKV6State:
+    h = d_model // head_size
+    return RWKV6State(
+        s=jnp.zeros((batch, h, head_size, head_size), jnp.float32),
+        tm_shift=jnp.zeros((batch, d_model), jnp.float32),
+        cm_shift=jnp.zeros((batch, d_model), jnp.float32))

@@ -1,0 +1,179 @@
+"""Logical-axis sharding: params and activations carry *logical* axis names;
+a per-arch rule table maps them onto mesh axes with divisibility fallback.
+
+This is the framework's central distribution knob (MaxText-style): the
+baseline rules below give TP over "model" (flattened head*head_dim and ffn
+dims — chosen because every assigned arch's projection dims divide 16, while
+raw head counts often don't), FSDP over "data" for the embed dim of weight
+matrices (ZeRO-3 via GSPMD gather-on-use), and batch over ("pod", "data").
+§Perf hillclimbs override per-arch via ``ModelConfig.sharding_rules``.
+
+Divisibility fallback: a logical axis only binds to a mesh axis if the dim
+divides the axis size and the axis is not already used by an earlier logical
+axis of the same tensor; otherwise it is replicated. This keeps every
+(arch x shape x mesh) cell lowerable without per-arch special cases.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisBinding = Union[None, str, tuple]
+
+# Baseline parameter rules (logical name -> mesh axes, tried in order).
+PARAM_RULES: dict[str, AxisBinding] = {
+    "vocab": "model",
+    "embed": "data",        # FSDP: gather-on-use
+    "qkv_dim": "model",     # flattened heads*head_dim — always divisible
+    "kv_dim": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "ffn": "model",
+    "ffn2": None,
+    "experts": "model",     # MoE EP when E % axis == 0, else ffn gets it
+    "layers": None,         # stacked-scan leading dim
+}
+
+# Baseline activation rules.
+ACT_RULES: dict[str, AxisBinding] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "qkv_dim": "model",
+    "kv_dim": "model",
+    "heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "vocab": "model",
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.param_rules = dict(PARAM_RULES)
+        self.act_rules = dict(ACT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh],
+                 param_overrides: Sequence[tuple] = (),
+                 act_overrides: Sequence[tuple] = ()):
+    """Activate a mesh + rule overrides for constrain()/param_shardings()."""
+    old = (_CTX.mesh, _CTX.param_rules, _CTX.act_rules)
+    _CTX.mesh = mesh
+    _CTX.param_rules = dict(PARAM_RULES, **dict(param_overrides))
+    _CTX.act_rules = dict(ACT_RULES, **dict(act_overrides))
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.param_rules, _CTX.act_rules = old
+
+
+def _axes_size(mesh: Mesh, binding: AxisBinding) -> int:
+    if binding is None:
+        return 1
+    if isinstance(binding, str):
+        binding = (binding,)
+    size = 1
+    for ax in binding:
+        size *= mesh.shape[ax]
+    return size
+
+
+def _binding_axes(binding: AxisBinding) -> tuple:
+    if binding is None:
+        return ()
+    if isinstance(binding, str):
+        return (binding,)
+    return tuple(binding)
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             rules: dict, mesh: Mesh) -> P:
+    """Build a PartitionSpec honoring divisibility + no-axis-reuse."""
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, logical):
+        binding = rules.get(name) if name else None
+        # keep only axes present in this mesh (e.g. "pod" is absent on the
+        # single-pod mesh — the remaining "data" binding must survive)
+        axes = tuple(ax for ax in _binding_axes(binding)
+                     if ax in mesh.shape)
+        size = 1
+        for ax in axes:
+            size *= mesh.shape[ax]
+        if (not axes or any(ax in used for ax in axes)
+                or dim % size != 0):
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else tuple(axes))
+    # drop trailing Nones for tidiness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _get_by_path(tree, path):
+    for k in path:
+        if hasattr(k, "key"):
+            tree = tree[k.key]
+        elif hasattr(k, "idx"):
+            tree = tree[k.idx]
+        else:
+            tree = tree[k.name]
+    return tree
+
+
+def param_shardings(params, axes_tree, mesh: Optional[Mesh] = None,
+                    rules: Optional[dict] = None):
+    """Tree of NamedSharding matching ``params`` structure.
+
+    ``axes_tree`` mirrors ``params`` except its leaves are tuples of logical
+    axis names — tuples are themselves pytrees, so we walk by key-path
+    instead of tree_map.
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.param_rules
+    if mesh is None:
+        return jax.tree.map(lambda x: None, params)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        logical = _get_by_path(axes_tree, path)
+        if logical is None:
+            logical = (None,) * leaf.ndim
+        # stacked-scan layers prepend a "layers" dim not present in the
+        # per-layer logical axes
+        if len(logical) == leaf.ndim - 1:
+            logical = ("layers",) + tuple(logical)
+        assert len(logical) == leaf.ndim, (path, leaf.shape, logical)
+        out.append(NamedSharding(
+            mesh, spec_for(leaf.shape, logical, rules, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical activation axes (no-op without
+    an active mesh — smoke tests run unsharded)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical, _CTX.act_rules, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh

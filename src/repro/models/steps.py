@@ -1,0 +1,202 @@
+"""Step builders: the jit-able train / prefill / decode entry points that
+both the runtime trainer and the multi-pod dry-run lower.
+
+``input_specs(cfg, shape_name)`` produces ShapeDtypeStruct stand-ins for
+every model input of an assigned (arch x input-shape) cell — weak-type
+correct, shardable, zero device allocation (the dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoding as D
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.optim.schedule import linear_warmup_cosine
+
+
+# --------------------------------------------------------------------------
+# Assigned input shapes (LM-family: seq_len x global_batch)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(applicable, reason-if-not). The long_500k skip rule lives here."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("global full-attention layers: 512k decode KV state "
+                       "is the blocker per the shape spec (run only for "
+                       "SSM/hybrid/windowed archs)")
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Train step
+# --------------------------------------------------------------------------
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def make_train_state(key, cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params, axes = T.init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg)), axes
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    warmup_steps: int = 100, total_steps: int = 10_000):
+    """Pure (state, batch) -> (state, metrics). pjit-ready: under a mesh the
+    sharding constraints inside the model drive GSPMD; gradients reduce
+    across data shards implicitly through the partitioned loss mean."""
+
+    def train_step(state: TrainState, batch: dict):
+        grad_fn = jax.value_and_grad(
+            lambda p: T.lm_loss(p, cfg, batch), has_aux=True)
+        (loss, metrics), grads = grad_fn(state.params)
+        lr_scale = linear_warmup_cosine(state.opt.step + 1, warmup_steps,
+                                        total_steps)
+        new_params, new_opt, om = adamw_update(
+            state.params, grads, state.opt, opt_cfg, lr_scale)
+        return TrainState(new_params, new_opt), {**metrics, **om}
+
+    return train_step
+
+
+def make_grad_accum_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                               accum_steps: int,
+                               warmup_steps: int = 100,
+                               total_steps: int = 10_000):
+    """Micro-batched step: scan over ``accum_steps`` slices of the batch's
+    leading dim, average grads, single optimizer update (single gradient
+    reduction — the collective-overlap-friendly formulation)."""
+
+    def train_step(state: TrainState, batch: dict):
+        def micro(i):
+            return jax.tree.map(
+                lambda x: x.reshape(accum_steps, -1, *x.shape[1:])[i], batch)
+
+        def body(acc, i):
+            (loss, m), g = jax.value_and_grad(
+                lambda p: T.lm_loss(p, cfg, micro(i)), has_aux=True)(
+                    state.params)
+            acc = jax.tree.map(jnp.add, acc,
+                               jax.tree.map(lambda x: x / accum_steps, g))
+            return acc, loss
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state.params)
+        grads, losses = jax.lax.scan(body, zeros, jnp.arange(accum_steps))
+        lr_scale = linear_warmup_cosine(state.opt.step + 1, warmup_steps,
+                                        total_steps)
+        new_params, new_opt, om = adamw_update(
+            state.params, grads, state.opt, opt_cfg, lr_scale)
+        return TrainState(new_params, new_opt), {
+            "loss": jnp.mean(losses), **om}
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Serve steps
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch: dict):
+        return D.prefill(params, cfg, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, enc_out=None):
+        return D.decode_step(params, cfg, token, cache, enc_out=enc_out)
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# ShapeDtypeStruct input specs (the dry-run contract)
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Stand-ins for every input of (arch x shape): no allocation.
+
+    train:   {tokens, labels (+patches/frames)}
+    prefill: {tokens (+patches/frames)}
+    decode:  {token, cache, (enc_out)} — cache sized to seq_len.
+    """
+    sh = SHAPES[shape_name]
+    b = sh.global_batch
+    if sh.kind in ("train", "prefill"):
+        spec = {"tokens": _sds((b, sh.seq_len), jnp.int32)}
+        if sh.kind == "train":
+            spec["labels"] = _sds((b, sh.seq_len), jnp.int32)
+        if cfg.family == "vlm":
+            spec["patches"] = _sds((b, cfg.num_patches, cfg.d_model),
+                                   jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            spec["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+        return spec
+
+    # decode: token + cache filled to seq_len. eval_shape — a 32k x 128
+    # full-config cache is terabytes; only its structure is materialized.
+    spec = {"token": _sds((b, 1), jnp.int32)}
+    cache_shape = jax.eval_shape(
+        lambda: D.init_cache(cfg, b, sh.seq_len + 8))
+    spec["cache"] = jax.tree.map(
+        lambda x: _sds(x.shape, x.dtype), cache_shape)
+    if cfg.is_encoder_decoder:
+        spec["enc_out"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16)
+    return spec
+
+
+def params_specs(cfg: ModelConfig, with_opt: bool,
+                 opt_cfg: Optional[AdamWConfig] = None):
+    """ShapeDtypeStructs for params (+ optimizer state) via eval_shape —
+    no host RAM spent on a 314B-param init."""
+    def mk():
+        params, _ = T.init_params(jax.random.key(0), cfg)
+        if not with_opt:
+            return params
+        return TrainState(params, adamw_init(params, opt_cfg))
+
+    return jax.eval_shape(mk)
+
+
+def params_axes(cfg: ModelConfig):
+    """Logical-axes tree (init runs under eval_shape: axes are metadata)."""
+    out = {}
+
+    def mk():
+        params, axes = T.init_params(jax.random.key(0), cfg)
+        out["axes"] = axes
+        return params
+
+    jax.eval_shape(mk)
+    return out["axes"]

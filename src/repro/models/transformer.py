@@ -1,0 +1,448 @@
+"""The unified LM covering all 10 assigned architectures.
+
+A model is ``init_params`` + three pure entry points:
+
+- ``forward``      — training/teacher-forcing logits (also the prefill math)
+- ``prefill``      — forward + build the decode cache
+- ``decode_step``  — one token in, one token out, cache updated
+
+Layer stacking: when the (mixer, mlp) pattern period divides num_layers the
+repeats are stacked along a leading "layers" axis and executed with
+``lax.scan`` (small HLO — essential for grok's 64 layers on a 512-device
+dry-run compile); otherwise a python loop over per-layer params (e.g.
+recurrentgemma's 26 layers with period 3). Gradient checkpointing wraps the
+scan body / each looped layer (policy: nothing saved but block boundaries).
+
+Decode caches are per-mixer-kind NamedTuples (KVCache / RingKVCache /
+RGLRUState / RWKV6State + channel-mix shifts), stacked like the params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import mlp as mlp_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def _norm_init(cfg: ModelConfig, d: int):
+    if cfg.norm_kind == "ln":
+        return L.layernorm_init(d, _dtype(cfg.param_dtype))
+    return L.rmsnorm_init(d, _dtype(cfg.param_dtype))
+
+
+def _norm(cfg: ModelConfig, p, x):
+    if cfg.norm_kind == "ln":
+        return L.layernorm(p, x, cfg.norm_eps)
+    return L.rmsnorm(p, x, cfg.norm_eps)
+
+
+# ==========================================================================
+# Block init
+# ==========================================================================
+
+def _attn_init(key, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = L.dense_init(ks[0], d, hq * hd, ("embed", "qkv_dim"),
+                                    dt, bias=cfg.qkv_bias)
+    p["wk"], a["wk"] = L.dense_init(ks[1], d, hkv * hd, ("embed", "kv_dim"),
+                                    dt, bias=cfg.qkv_bias)
+    p["wv"], a["wv"] = L.dense_init(ks[2], d, hkv * hd, ("embed", "kv_dim"),
+                                    dt, bias=cfg.qkv_bias)
+    p["wo"], a["wo"] = L.dense_init(ks[3], hq * hd, d, ("qkv_dim", "embed"),
+                                    dt)
+    return p, a
+
+
+def block_init(key, cfg: ModelConfig, layer: int, decoder: bool = True):
+    """One residual block: mixer + mlp (+ cross-attn for enc-dec decoder)."""
+    mixer = cfg.mixer_of(layer)
+    mlp_kind = cfg.mlp_of(layer)
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = _norm_init(cfg, cfg.d_model)
+    p["norm2"], a["norm2"] = _norm_init(cfg, cfg.d_model)
+    if cfg.use_post_norm:
+        p["post_norm1"], a["post_norm1"] = _norm_init(cfg, cfg.d_model)
+        p["post_norm2"], a["post_norm2"] = _norm_init(cfg, cfg.d_model)
+
+    if mixer in ("attn", "local_attn", "bidir_attn"):
+        p["mixer"], a["mixer"] = _attn_init(ks[0], cfg)
+    elif mixer == "rglru":
+        p["mixer"], a["mixer"] = rglru_lib.rglru_init(
+            ks[0], cfg.d_model, cfg.lru_width or cfg.d_model,
+            cfg.conv_width, dt)
+    elif mixer == "rwkv6":
+        p["mixer"], a["mixer"] = rwkv_lib.rwkv6_init(
+            ks[0], cfg.d_model, cfg.rwkv_head_size, dt)
+    else:
+        raise ValueError(mixer)
+
+    if mlp_kind == "moe":
+        p["mlp"], a["mlp"] = mlp_lib.moe_init(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts, dt)
+    elif mlp_kind == "rwkv_cmix":
+        p["mlp"], a["mlp"] = rwkv_lib.rwkv6_cmix_init(
+            ks[1], cfg.d_model, cfg.d_ff, dt)
+    else:
+        p["mlp"], a["mlp"] = mlp_lib.mlp_init(
+            ks[1], cfg.d_model, cfg.d_ff, mlp_kind, dt)
+
+    if decoder and cfg.is_encoder_decoder:
+        p["cross"], a["cross"] = _attn_init(ks[2], cfg, cross=True)
+        p["norm_cross"], a["norm_cross"] = _norm_init(cfg, cfg.d_model)
+    return p, a
+
+
+# ==========================================================================
+# Block apply (train / prefill)
+# ==========================================================================
+
+def _attn_apply_train(p, cfg: ModelConfig, x, kind: str, q_offset: int = 0,
+                      kv_override=None, positions=None):
+    b, s, d = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+
+    q = L.dense(p["wq"], x)
+    q = constrain(q, ("batch", "seq", "qkv_dim"))
+    if kv_override is None:
+        kx = L.dense(p["wk"], x)
+        vx = L.dense(p["wv"], x)
+        sk = s
+    else:
+        kx, vx = kv_override       # encoder output projections (cross-attn)
+        sk = kx.shape[1]
+    q = q.reshape(b, s, hq, hd)
+    k = kx.reshape(b, sk, hkv, hd)
+    v = vx.reshape(b, sk, hkv, hd)
+
+    if cfg.use_rope and kind != "cross":
+        pos_q = (positions if positions is not None
+                 else q_offset + jnp.arange(s))
+        q = L.apply_rope(q, pos_q, cfg.rope_theta)
+        if kv_override is None:
+            k = L.apply_rope(k, jnp.arange(sk), cfg.rope_theta)
+
+    attn_kind = {"attn": "causal", "local_attn": "local",
+                 "bidir_attn": "bidir", "cross": "bidir"}[kind]
+    out = attn_lib.flash_attention(
+        q, k, v, kind=attn_kind, window=cfg.local_window,
+        attn_softcap=cfg.attn_softcap, q_offset=q_offset,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    out = out.reshape(b, s, hq * hd)
+    out = constrain(out, ("batch", "seq", "qkv_dim"))
+    y = L.dense(p["wo"], out)
+    return y, (k, v)
+
+
+def block_apply(p, cfg: ModelConfig, layer: int, x,
+                enc_kv=None, decoder: bool = True,
+                collect_len: Optional[int] = None):
+    """Training forward for one block.
+
+    ``collect_len``: if set, also build and return this layer's decode cache
+    (fused prefill — K/V and recurrent states are captured in the same pass
+    instead of replaying the layer). Returns x, or (x, cache_dict).
+    """
+    mixer = cfg.mixer_of(layer)
+    mlp_kind = cfg.mlp_of(layer)
+    s = x.shape[1]
+    lc = {} if collect_len is not None else None
+
+    h = _norm(cfg, p["norm1"], x)
+    if mixer in ("attn", "local_attn", "bidir_attn"):
+        y, (k, v) = _attn_apply_train(p["mixer"], cfg, h, mixer)
+        if lc is not None:
+            lc.update(_collect_attn_cache(cfg, mixer, k, v, s, collect_len))
+    elif mixer == "rglru":
+        if lc is not None:
+            y, st = rglru_lib.rglru_block(p["mixer"], h, return_state=True)
+            lc["kind_rglru"] = st
+        else:
+            y = rglru_lib.rglru_block(p["mixer"], h)
+    elif mixer == "rwkv6":
+        if lc is not None:
+            y, (s_f, shift_f) = rwkv_lib.rwkv6_time_mix(
+                p["mixer"], h, cfg.rwkv_head_size, return_state=True)
+            lc["kind_rwkv"] = rwkv_lib.RWKV6State(
+                s=s_f, tm_shift=shift_f,
+                cm_shift=jnp.zeros_like(shift_f))
+        else:
+            y = rwkv_lib.rwkv6_time_mix(p["mixer"], h, cfg.rwkv_head_size)
+    if cfg.use_post_norm:
+        y = _norm(cfg, p["post_norm1"], y)
+    x = x + y
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    if decoder and cfg.is_encoder_decoder and enc_kv is not None:
+        h = _norm(cfg, p["norm_cross"], x)
+        y, _ = _attn_apply_train(p["cross"], cfg, h, "cross",
+                                 kv_override=enc_kv)
+        x = x + y
+
+    h = _norm(cfg, p["norm2"], x)
+    if mlp_kind == "moe":
+        y = mlp_lib.moe_apply(
+            p["mlp"], h, num_experts=cfg.num_experts,
+            top_k=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor,
+            group_size=cfg.moe_group_size)
+    elif mlp_kind == "rwkv_cmix":
+        y, _ = rwkv_lib.rwkv6_cmix(p["mlp"], h)
+        if lc is not None:
+            lc["cmix_shift"] = h.astype(jnp.float32)[:, -1]
+    else:
+        y = mlp_lib.mlp_apply(p["mlp"], h, mlp_kind)
+    if cfg.use_post_norm:
+        y = _norm(cfg, p["post_norm2"], y)
+    x = x + y
+    x = constrain(x, ("batch", "seq", "embed"))
+    if lc is not None:
+        return x, lc
+    return x
+
+
+def _collect_attn_cache(cfg: ModelConfig, mixer: str, k, v, s: int,
+                        max_len: int):
+    """Pack prefill K/V [B, S, Hkv, D] into the decode cache layout."""
+    from repro.models import attention as attn_lib
+    b, _, hkv, hd = k.shape
+    dt = k.dtype
+    if mixer in ("attn", "bidir_attn"):
+        cache = attn_lib.empty_cache(b, max_len, hkv, hd, dt)
+        return {"kind_attn": attn_lib.prefill_into_cache(cache, k, v, s)}
+    wnd = min(cfg.local_window, max_len)
+    take = min(wnd, s)
+    positions = jnp.arange(s - take, s)
+    slots = positions % wnd
+    cache = attn_lib.empty_ring_cache(b, wnd, hkv, hd, dt)
+    return {"kind_local": attn_lib.RingKVCache(
+        k=cache.k.at[:, slots].set(k[:, s - take:]),
+        v=cache.v.at[:, slots].set(v[:, s - take:]),
+        pos=cache.pos.at[slots].set(positions),
+        length=jnp.asarray(s, jnp.int32))}
+
+
+# ==========================================================================
+# Model init
+# ==========================================================================
+
+def _stacked(fn, key, n: int):
+    """Stack n init results along a new leading axis; returns (params, axes
+    of ONE element — param_shardings prepends the 'layers' dim)."""
+    keys = jax.random.split(key, n)
+    trees = [fn(keys[i]) for i in range(n)]
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[t[0] for t in trees])
+    return params, trees[0][1]
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg.param_dtype)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.embedding_init(ks[0], cfg.padded_vocab,
+                                              cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["unembed"], a["unembed"] = L.embedding_init(
+            ks[1], cfg.padded_vocab, cfg.d_model, dt)
+    if cfg.use_abs_pos:
+        p["pos"], a["pos"] = L.abs_pos_init(ks[2], cfg.max_abs_pos,
+                                            cfg.d_model, dt)
+    p["final_norm"], a["final_norm"] = _norm_init(cfg, cfg.d_model)
+
+    period = cfg.uniform_period
+    if period < cfg.num_layers:
+        n_rep = cfg.num_layers // period
+        slots_p, slots_a = [], []
+        for s in range(period):
+            sp, sa = _stacked(
+                lambda k, s=s: block_init(k, cfg, s), ks[3] if s == 0
+                else jax.random.fold_in(ks[3], s), n_rep)
+            slots_p.append(sp)
+            slots_a.append(sa)
+        p["layers"] = slots_p
+        a["layers"] = slots_a
+    else:
+        lk = jax.random.split(ks[3], cfg.num_layers)
+        per = [block_init(lk[i], cfg, i) for i in range(cfg.num_layers)]
+        p["layers"] = [t[0] for t in per]
+        a["layers"] = [t[1] for t in per]
+
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(ks[4], cfg.encoder_layers)
+        enc = [block_init(ek[i], cfg, i, decoder=False)
+               for i in range(cfg.encoder_layers)]
+        # encoder blocks are uniform bidir-attn: stack + scan
+        p["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[t[0] for t in enc])
+        a["encoder"] = enc[0][1]
+        p["enc_norm"], a["enc_norm"] = _norm_init(cfg, cfg.d_model)
+        p["enc_pos"], a["enc_pos"] = L.abs_pos_init(
+            ks[5], cfg.encoder_seq, cfg.d_model, dt)
+    return p, a
+
+
+# ==========================================================================
+# Forward (train / prefill math)
+# ==========================================================================
+
+def _embed_inputs(p, cfg: ModelConfig, batch: dict):
+    """tokens (+ optional patch/frame prefix) -> [B, S_total, D], and the
+    number of prefix positions (excluded from the LM loss)."""
+    x = L.embed(p["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        prefix = batch["patches"].shape[1]
+    else:
+        prefix = 0
+    if cfg.use_abs_pos and not cfg.is_encoder_decoder:
+        s = x.shape[1]
+        x = x + p["pos"]["pos"][:s]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma family
+    return x, prefix
+
+
+def _encode(p, cfg: ModelConfig, frames: jnp.ndarray):
+    """Whisper encoder over precomputed conv-frontend frames [B, T, D]."""
+    x = frames.astype(_dtype(cfg.compute_dtype))
+    x = x + p["enc_pos"]["pos"][:x.shape[1]]
+
+    def enc_body(carry, lp):
+        h = _norm(cfg, lp["norm1"], carry)
+        y, _ = _attn_apply_train(lp["mixer"], cfg, h, "bidir_attn")
+        carry = carry + y
+        h = _norm(cfg, lp["norm2"], carry)
+        y = mlp_lib.mlp_apply(lp["mlp"], h, cfg.mlp_of(0))
+        return carry + y, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(enc_body), x, p["encoder"])
+    return _norm(cfg, p["enc_norm"], x)
+
+
+def forward(p, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    """Teacher-forcing logits [B, S_tokens, padded_vocab] (f32)."""
+    x, prefix = _embed_inputs(p, cfg, batch)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    enc_kv = None
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(p, cfg, batch["frames"])
+
+    period = cfg.uniform_period
+    if period < cfg.num_layers:
+        def body(x, slot_params):
+            for s in range(period):
+                lp = slot_params[s]
+                ekv = None
+                if enc_out is not None:
+                    kx = L.dense(lp["cross"]["wk"], enc_out)
+                    vx = L.dense(lp["cross"]["wv"], enc_out)
+                    ekv = (kx, vx)
+                x = block_apply(lp, cfg, s, x, enc_kv=ekv)
+            return x, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, p["layers"])
+    else:
+        for i, lp in enumerate(p["layers"]):
+            ekv = None
+            if enc_out is not None:
+                kx = L.dense(lp["cross"]["wk"], enc_out)
+                vx = L.dense(lp["cross"]["wv"], enc_out)
+                ekv = (kx, vx)
+            x = jax.checkpoint(
+                functools.partial(block_apply, cfg=cfg, layer=i,
+                                  decoder=True))(lp, x=x, enc_kv=ekv)
+
+    x = _norm(cfg, p["final_norm"], x)
+    if prefix:
+        x = x[:, prefix:]
+    head = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    logits = L.unembed(head, x, cfg.logit_softcap)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward_with_cache(p, cfg: ModelConfig, batch: dict, max_len: int):
+    """Fused prefill: one forward pass that also builds the decode cache.
+
+    Returns (logits [B, S_tokens, Vp], cache, enc_out or None). Cache layout
+    matches ``repro.models.decoding.init_cache``.
+    """
+    x, prefix = _embed_inputs(p, cfg, batch)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(p, cfg, batch["frames"])
+
+    period = cfg.uniform_period
+    caches = []
+    if period < cfg.num_layers:
+        def body(x, slot_params):
+            lcs = []
+            for s in range(period):
+                lp = slot_params[s]
+                ekv = None
+                if enc_out is not None:
+                    ekv = (L.dense(lp["cross"]["wk"], enc_out),
+                           L.dense(lp["cross"]["wv"], enc_out))
+                x, lc = block_apply(lp, cfg, s, x, enc_kv=ekv,
+                                    collect_len=max_len)
+                lcs.append(lc)
+            return x, tuple(lcs)
+
+        x, stacked = jax.lax.scan(body, x, p["layers"])
+        caches = list(stacked)
+    else:
+        for i, lp in enumerate(p["layers"]):
+            ekv = None
+            if enc_out is not None:
+                ekv = (L.dense(lp["cross"]["wk"], enc_out),
+                       L.dense(lp["cross"]["wv"], enc_out))
+            x, lc = block_apply(lp, cfg, i, x, enc_kv=ekv,
+                                collect_len=max_len)
+            caches.append(lc)
+
+    x = _norm(cfg, p["final_norm"], x)
+    if prefix:
+        x = x[:, prefix:]
+    head = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    logits = L.unembed(head, x, cfg.logit_softcap)
+    return constrain(logits, ("batch", "seq", "vocab")), caches, enc_out
+
+
+def lm_loss(p, cfg: ModelConfig, batch: dict):
+    """Next-token cross-entropy with padded-vocab masking."""
+    logits = forward(p, cfg, batch)            # [B, S, Vp] f32
+    labels = batch["labels"]
+    vp = cfg.padded_vocab
+    mask = jnp.arange(vp) < cfg.vocab_size
+    logits = jnp.where(mask[None, None, :], logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+    metrics = {"loss": loss,
+               "tokens": jnp.sum(valid),
+               "logit_max": jnp.max(logits)}
+    return loss, metrics

@@ -1,0 +1,59 @@
+"""Int8 error-feedback gradient compression for DP all-reduce.
+
+Distributed-optimization trick for the 1000+-node regime: data-parallel
+gradient all-reduce bytes drop 4x (f32 -> i8 + one f32 scale per tensor);
+the quantization error is fed back into the next step's gradient (error
+feedback keeps SGD/Adam convergence — Karimireddy et al., arXiv:1901.09847).
+
+Usage inside a pjit'd train step::
+
+    g_q, scale = compress_int8(g + ef)          # quantize with feedback
+    ef_new     = (g + ef) - decompress_int8(g_q, scale)
+    g_sync     = psum(decompress) / N           # or psum the int8 payload
+                                                # via shard_map for real
+                                                # wire-format savings
+
+The trainer exposes this via ``TrainConfig.grad_compression = "int8_ef"``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127) \
+        .astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_compress_update(grad: jnp.ndarray, error: jnp.ndarray):
+    """One error-feedback round for a single tensor.
+
+    Returns (compressed_estimate, new_error): ``compressed_estimate`` is the
+    dequantized value that all ranks agree on after the (int8) all-reduce;
+    ``new_error`` is carried to the next step.
+    """
+    target = grad.astype(jnp.float32) + error
+    q, scale = compress_int8(target)
+    est = decompress_int8(q, scale)
+    return est.astype(grad.dtype), (target - est)
+
+
+def tree_ef_compress(grads, errors):
+    """Apply error-feedback compression leaf-wise over a gradient pytree."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    outs = [ef_compress_update(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e

@@ -1,0 +1,86 @@
+"""Multi-device backend equivalence check — run as a subprocess with 8 host
+devices (tests/test_backends.py drives this; the main pytest process must
+keep a single device)."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import WEEKS_PER_YEAR
+from repro.core import (
+    malstone_run,
+    malstone_run_partitioned,
+    malstone_single_device,
+    pad_log_to,
+)
+from repro.malgen import MalGenConfig, generate_sharded_log
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+    mesh = jax.make_mesh((8,), ("data",))
+
+    cfg = MalGenConfig(num_sites=301, num_entities=1000,
+                       marked_site_fraction=0.2, marked_event_fraction=0.3)
+    key = jax.random.key(7)
+    log, seed = generate_sharded_log(key, cfg, num_shards=8,
+                                     records_per_shard=4096)
+
+    ref = malstone_single_device(log, cfg.num_sites, statistic="B")
+
+    results = {}
+    for backend in ("streams", "sphere", "mapreduce",
+                    "mapreduce_combiner"):
+        res = malstone_run(log, cfg.num_sites, mesh=mesh, statistic="B",
+                           backend=backend, capacity_factor=3.0)
+        results[backend] = res
+        np.testing.assert_array_equal(
+            np.asarray(res.total), np.asarray(ref.total),
+            err_msg=f"{backend}: total counts differ from single-device")
+        np.testing.assert_array_equal(
+            np.asarray(res.marked), np.asarray(ref.marked),
+            err_msg=f"{backend}: marked counts differ")
+        np.testing.assert_allclose(
+            np.asarray(res.rho), np.asarray(ref.rho), rtol=1e-6,
+            err_msg=f"{backend}: rho differs")
+        print(f"OK backend={backend}")
+
+    # MalStone A equivalence too
+    for backend in ("streams", "sphere", "mapreduce",
+                    "mapreduce_combiner"):
+        res = malstone_run(log, cfg.num_sites, mesh=mesh, statistic="A",
+                           backend=backend, capacity_factor=3.0)
+        ref_a = malstone_single_device(log, cfg.num_sites, statistic="A")
+        np.testing.assert_allclose(np.asarray(res.rho), np.asarray(ref_a.rho),
+                                   rtol=1e-6)
+    print("OK malstone A x4 backends")
+
+    # Partitioned (production sphere) path: concatenating owned blocks
+    # reconstructs the padded full result.
+    part = malstone_run_partitioned(log, cfg.num_sites, mesh=mesh,
+                                    statistic="B")
+    s_pad = ((cfg.num_sites + 7) // 8) * 8
+    assert part.rho.shape == (s_pad, WEEKS_PER_YEAR), part.rho.shape
+    np.testing.assert_allclose(np.asarray(part.rho)[:cfg.num_sites],
+                               np.asarray(ref.rho), rtol=1e-6)
+    print("OK partitioned sphere path")
+
+    # Padded (non-divisible) record counts
+    odd = jax.tree.map(lambda x: x[:30_001], log)
+    padded = pad_log_to(odd, 30_008)
+    ref_odd = malstone_single_device(odd, cfg.num_sites)
+    got = malstone_run(padded, cfg.num_sites, mesh=mesh, backend="streams")
+    np.testing.assert_array_equal(np.asarray(got.total),
+                                  np.asarray(ref_odd.total))
+    print("OK padded logs")
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

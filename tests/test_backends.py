@@ -1,0 +1,90 @@
+"""Backend equivalence tests.
+
+Single-device semantics are tested inline; the multi-device dataflows
+(shard_map + collectives over 8 host devices) run in a subprocess because
+device count is locked at first jax init and the main pytest process must
+stay single-device (see dryrun instructions).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import EventLog, SECONDS_PER_YEAR
+from repro.core import malstone_single_device, site_week_histogram
+from repro.core.backends.mapreduce import _pack_buckets
+
+HERE = pathlib.Path(__file__).parent
+SRC = str(HERE.parent / "src")
+
+
+def _run_md_script(name: str, timeout=600) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "md_scripts" / name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"{name} failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_backends_equivalent_on_8_devices():
+    out = _run_md_script("backends_check.py")
+    assert "ALL_OK" in out
+
+
+class TestPackBuckets:
+    def make_log(self, site, n=None):
+        n = n or len(site)
+        return EventLog(
+            site_id=jnp.asarray(site, jnp.int32),
+            entity_id=jnp.zeros(n, jnp.int32),
+            timestamp=jnp.zeros(n, jnp.int32),
+            mark=jnp.ones(n, jnp.int32),
+        )
+
+    def test_routes_by_site_mod_p(self):
+        log = self.make_log([0, 1, 2, 3, 4, 5, 6, 7])
+        (site, _, _, _, vmask), stats = _pack_buckets(log, 4, capacity=4)
+        assert int(stats.overflow) == 0
+        for p in range(4):
+            routed = np.asarray(site[p])[np.asarray(vmask[p])]
+            assert np.all(routed % 4 == p)
+
+    def test_overflow_counted(self):
+        log = self.make_log([0] * 10)  # all to partition 0
+        (_, _, _, _, vmask), stats = _pack_buckets(log, 2, capacity=4)
+        assert int(stats.overflow) == 6
+        assert int(stats.sent) == 4
+        assert int(np.asarray(vmask).sum()) == 4
+
+    def test_invalid_rows_never_packed(self):
+        log = self.make_log([0, 1, 0, 1])
+        log = log._replace(valid=jnp.array([True, False, True, False]))
+        (_, _, _, _, vmask), stats = _pack_buckets(log, 2, capacity=4)
+        assert int(stats.sent) == 2
+        assert int(np.asarray(vmask).sum()) == 2
+
+    def test_histogram_of_packed_equals_direct(self):
+        rng = np.random.default_rng(3)
+        sites = rng.integers(0, 16, 200)
+        log = self.make_log(sites)
+        (site, entity, ts, mark, vmask), stats = _pack_buckets(
+            log, 4, capacity=200)
+        assert int(stats.overflow) == 0
+        packed = EventLog(
+            site_id=site.reshape(-1), entity_id=entity.reshape(-1),
+            timestamp=ts.reshape(-1), mark=mark.reshape(-1),
+            valid=vmask.reshape(-1))
+        h1 = site_week_histogram(packed, 16)
+        h2 = site_week_histogram(log, 16)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))

@@ -1,0 +1,180 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.segment_hist.ops import segment_hist, segment_hist_eventlog
+from repro.kernels.segment_hist.ref import segment_hist_ref
+from repro.kernels.windowed_ratio.ops import windowed_ratio
+from repro.kernels.windowed_ratio.ref import windowed_ratio_ref
+from repro.kernels.powerlaw_sample.ops import powerlaw_sample
+from repro.kernels.powerlaw_sample.ref import powerlaw_sample_ref
+from repro.common.types import EventLog
+
+
+# --------------------------------------------------------------------------
+# segment_hist
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 4097])
+@pytest.mark.parametrize("s,w", [(1, 1), (7, 52), (300, 52), (513, 13)])
+def test_segment_hist_shape_sweep(n, s, w):
+    rng = np.random.default_rng(n * 1000 + s + w)
+    site = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+    week = jnp.asarray(rng.integers(0, w, n), jnp.int32)
+    mark = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    got = segment_hist(site, week, mark, valid, num_sites=s, num_weeks=w)
+    want = segment_hist_ref(site, week, mark, valid, s, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("site_tile,record_tile",
+                         [(128, 256), (256, 1024), (512, 512)])
+def test_segment_hist_tile_sweep(site_tile, record_tile):
+    rng = np.random.default_rng(42)
+    n, s, w = 3000, 400, 52
+    site = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+    week = jnp.asarray(rng.integers(0, w, n), jnp.int32)
+    mark = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    valid = jnp.ones(n, jnp.int32)
+    got = segment_hist(site, week, mark, valid, num_sites=s, num_weeks=w,
+                       site_tile=site_tile, record_tile=record_tile)
+    want = segment_hist_ref(site, week, mark, valid, s, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("in_dtype", [jnp.int32, jnp.int8, jnp.bool_])
+def test_segment_hist_mark_dtype_sweep(in_dtype):
+    rng = np.random.default_rng(7)
+    n, s = 500, 64
+    site = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+    week = jnp.asarray(rng.integers(0, 52, n), jnp.int32)
+    mark = jnp.asarray(rng.integers(0, 2, n)).astype(in_dtype)
+    valid = jnp.ones(n, jnp.bool_)
+    got = segment_hist(site, week, mark.astype(jnp.int32), valid,
+                       num_sites=s)
+    want = segment_hist_ref(site, week, mark.astype(jnp.int32),
+                            valid.astype(jnp.int32), s, 52)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_hist_out_of_range_sites_ignored():
+    site = jnp.asarray([-1, 5, 999999], jnp.int32)
+    week = jnp.zeros(3, jnp.int32)
+    mark = jnp.ones(3, jnp.int32)
+    valid = jnp.ones(3, jnp.int32)
+    got = segment_hist(site, week, mark, valid, num_sites=8)
+    assert int(got.sum()) == 2  # only site 5 counted (total + marked)
+
+
+def test_segment_hist_eventlog_matches_core():
+    from repro.core.spm import site_week_histogram
+    from repro.malgen import MalGenConfig, generate_full_log
+    cfg = MalGenConfig(num_sites=200, num_entities=500)
+    log, _ = generate_full_log(jax.random.key(0), cfg, 4096)
+    got = segment_hist_eventlog(log, cfg.num_sites)
+    want = site_week_histogram(log, cfg.num_sites)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 40), st.integers(1, 60),
+       st.integers(0, 2**31 - 1))
+def test_segment_hist_property(n, s, w, seed):
+    rng = np.random.default_rng(seed)
+    site = jnp.asarray(rng.integers(-2, s + 2, n), jnp.int32)  # incl. OOR
+    week = jnp.asarray(rng.integers(0, w, n), jnp.int32)
+    mark = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    got = segment_hist(site, week, mark, valid, num_sites=s, num_weeks=w)
+    want = segment_hist_ref(site, week, mark, valid, s, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# windowed_ratio
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,w", [(1, 1), (10, 52), (513, 52), (100, 128),
+                                 (2048, 13)])
+def test_windowed_ratio_shape_sweep(s, w):
+    rng = np.random.default_rng(s * 100 + w)
+    total = rng.integers(0, 50, (s, w))
+    marked = np.minimum(rng.integers(0, 50, (s, w)), total)
+    hist = jnp.asarray(np.stack([total, marked], -1), jnp.int32)
+    rho, ct, cm = windowed_ratio(hist)
+    rrho, rct, rcm = windowed_ratio_ref(hist)
+    np.testing.assert_array_equal(np.asarray(ct), np.asarray(rct))
+    np.testing.assert_array_equal(np.asarray(cm), np.asarray(rcm))
+    np.testing.assert_allclose(np.asarray(rho), np.asarray(rrho), rtol=1e-6)
+
+
+def test_windowed_ratio_zero_weeks_are_zero():
+    hist = jnp.zeros((4, 52, 2), jnp.int32)
+    rho, _, _ = windowed_ratio(hist)
+    assert np.all(np.asarray(rho) == 0.0)
+    assert not np.any(np.isnan(np.asarray(rho)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_windowed_ratio_property(s, w, seed):
+    rng = np.random.default_rng(seed)
+    total = rng.integers(0, 100, (s, w))
+    marked = np.minimum(rng.integers(0, 100, (s, w)), total)
+    hist = jnp.asarray(np.stack([total, marked], -1), jnp.int32)
+    rho, ct, cm = windowed_ratio(hist)
+    rho = np.asarray(rho)
+    assert np.all((rho >= 0) & (rho <= 1))
+    rrho, _, _ = windowed_ratio_ref(hist)
+    np.testing.assert_allclose(rho, np.asarray(rrho), rtol=1e-6, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# powerlaw_sample
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 100, 512, 4099])
+@pytest.mark.parametrize("s", [1, 37, 2048, 5000])
+def test_powerlaw_sample_shape_sweep(n, s):
+    from repro.malgen import power_law_weights, power_law_cdf
+    cdf = power_law_cdf(power_law_weights(s))
+    u = jax.random.uniform(jax.random.key(n + s), (n,))
+    got = powerlaw_sample(u, cdf)
+    want = powerlaw_sample_ref(u, cdf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_powerlaw_sample_boundary_values():
+    cdf = jnp.asarray([0.25, 0.5, 0.75, 1.0])
+    u = jnp.asarray([0.0, 0.25, 0.2499999, 0.999999, 0.5])
+    got = np.asarray(powerlaw_sample(u, cdf))
+    want = np.asarray(powerlaw_sample_ref(u, cdf))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cdf_tile,record_tile", [(512, 128), (2048, 512)])
+def test_powerlaw_sample_tile_sweep(cdf_tile, record_tile):
+    from repro.malgen import power_law_weights, power_law_cdf
+    cdf = power_law_cdf(power_law_weights(3000))
+    u = jax.random.uniform(jax.random.key(0), (2000,))
+    got = powerlaw_sample(u, cdf, cdf_tile=cdf_tile, record_tile=record_tile)
+    want = powerlaw_sample_ref(u, cdf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 500), st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_powerlaw_sample_property(n, s, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random(s) + 1e-6
+    cdf = jnp.asarray(np.cumsum(w) / np.sum(w), jnp.float32)
+    u = jnp.asarray(rng.random(n), jnp.float32)
+    got = np.asarray(powerlaw_sample(u, cdf))
+    want = np.asarray(powerlaw_sample_ref(u, cdf))
+    np.testing.assert_array_equal(got, want)
+    assert np.all((got >= 0) & (got < s))

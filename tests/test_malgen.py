@@ -1,0 +1,192 @@
+"""MalGen tests: statistical properties, 3-phase consistency, record codec."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.types import (
+    NEVER_MARKED,
+    SECONDS_PER_WEEK,
+    SECONDS_PER_YEAR,
+)
+from repro.malgen import (
+    MalGenConfig,
+    encode_records,
+    decode_records,
+    generate_full_log,
+    generate_shard,
+    generate_sharded_log,
+    make_seed,
+    power_law_cdf,
+    power_law_weights,
+    sample_sites,
+    RECORD_BYTES,
+)
+from repro.malgen.seeding import marked_event_stream
+
+CFG = MalGenConfig(num_sites=500, num_entities=2000,
+                   marked_site_fraction=0.1, marked_event_fraction=0.25)
+
+
+class TestPowerLaw:
+    def test_weights_normalized_and_decreasing(self):
+        w = power_law_weights(1000, alpha=1.2)
+        assert np.isclose(float(w.sum()), 1.0, atol=1e-5)
+        assert np.all(np.diff(np.asarray(w)) <= 0)
+
+    def test_head_dominates_tail(self):
+        """Paper §5: most sites few entities, few sites very many."""
+        w = np.asarray(power_law_weights(10_000, alpha=1.2))
+        assert w[:100].sum() > 0.30  # top 1% of sites >30% of traffic
+
+    def test_sampling_matches_weights(self):
+        w = power_law_weights(50, alpha=1.0)
+        cdf = power_law_cdf(w)
+        s = sample_sites(jax.random.key(0), cdf, 200_000)
+        freq = np.bincount(np.asarray(s), minlength=50) / 200_000
+        np.testing.assert_allclose(freq, np.asarray(w), atol=5e-3)
+
+    def test_permutation_decorrelates_rank_from_id(self):
+        perm = jax.random.permutation(jax.random.key(1), 100)
+        w = np.asarray(power_law_weights(100, permutation=perm))
+        assert not np.all(np.diff(w) <= 0)  # no longer sorted by id
+
+
+class TestSeed:
+    def test_mark_times_have_delay(self):
+        seed = make_seed(jax.random.key(0), CFG, total_records=20_000)
+        mt = np.asarray(seed.entity_mark_time)
+        marked = mt[mt != NEVER_MARKED]
+        assert marked.size > 0
+        assert np.all(marked >= CFG.mark_delay)
+
+    def test_some_entities_never_marked(self):
+        """Paper §3: "not all entities become marked"."""
+        seed = make_seed(jax.random.key(0), CFG, total_records=20_000)
+        mt = np.asarray(seed.entity_mark_time)
+        assert np.any(mt == NEVER_MARKED)
+        assert np.any(mt != NEVER_MARKED)
+
+    def test_earliest_marking_visit_wins(self):
+        """Re-visits only move marks earlier (paper §5)."""
+        seed = make_seed(jax.random.key(2), CFG, total_records=50_000)
+        site, entity, ts = (np.asarray(x) for x in
+                            marked_event_stream(seed, CFG))
+        mt = np.asarray(seed.entity_mark_time)
+        # every mark equals some marking visit ts + delay; and no marking
+        # visit for that entity is earlier than (mark - delay) AND selected.
+        # We verify a necessary condition: mark - delay is one of the
+        # entity's visit times at a marked site.
+        for e in np.unique(entity)[:50]:
+            if mt[e] == NEVER_MARKED:
+                continue
+            visits = ts[entity == e]
+            assert (mt[e] - CFG.mark_delay) in visits
+
+    def test_seed_bytes_accounting(self):
+        seed = make_seed(jax.random.key(0), CFG, total_records=1000)
+        expected = CFG.num_sites + CFG.num_entities * 4 + CFG.num_sites * 4 + 32
+        assert seed.seed_bytes == expected
+
+
+class TestGeneration:
+    def test_shard_determinism(self):
+        seed = make_seed(jax.random.key(0), CFG, total_records=8192)
+        a = generate_shard(seed, CFG, 3, 8, 1024)
+        b = generate_shard(seed, CFG, 3, 8, 1024)
+        for x, y in zip(a, b):
+            if x is not None:
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_shards_partition_marked_stream(self):
+        """Every marked-site event appears exactly once across shards."""
+        num_shards, rps = 4, 2048
+        log, seed = generate_sharded_log(jax.random.key(1), CFG,
+                                         num_shards, rps)
+        m_site, m_entity, m_ts = (np.asarray(x) for x in
+                                  marked_event_stream(seed, CFG))
+        marked_mask = np.asarray(seed.marked_mask)
+        got = np.asarray(log.site_id)[marked_mask[np.asarray(log.site_id)]]
+        assert got.size == seed.num_marked_events
+        np.testing.assert_array_equal(np.sort(got), np.sort(m_site))
+
+    def test_joined_mark_flag_semantics(self):
+        """mark == 1 iff entity_mark_time <= visit ts (paper §4 Remark)."""
+        log, seed = generate_sharded_log(jax.random.key(2), CFG, 2, 4096)
+        mt = np.asarray(seed.entity_mark_time)
+        ts = np.asarray(log.timestamp)
+        ent = np.asarray(log.entity_id)
+        mark = np.asarray(log.mark)
+        np.testing.assert_array_equal(mark, (mt[ent] <= ts).astype(np.int32))
+
+    def test_unmarked_sites_only_in_local_stream(self):
+        """Phase 3 generates traffic only for unmarked sites (paper §5:
+        "subsequent sites are assumed to be unmarked")."""
+        seed = make_seed(jax.random.key(3), CFG, total_records=8192)
+        shard = generate_shard(seed, CFG, 0, 8, 1024)
+        marked_mask = np.asarray(seed.marked_mask)
+        n_marked_local = len(range(0, seed.num_marked_events, 8))
+        local_part = np.asarray(shard.site_id)[n_marked_local:]
+        assert not np.any(marked_mask[local_part])
+
+    def test_timestamps_within_span(self):
+        log, _ = generate_full_log(jax.random.key(4), CFG, 4096)
+        ts = np.asarray(log.timestamp)
+        assert np.all(ts >= 0) and np.all(ts < SECONDS_PER_YEAR)
+
+    def test_event_ids_unique_per_shard(self):
+        log, _ = generate_sharded_log(jax.random.key(5), CFG, 4, 512)
+        seq = np.asarray(log.event_seq)
+        hsh = np.asarray(log.shard_hash)
+        pairs = set(zip(hsh.tolist(), seq.tolist()))
+        assert len(pairs) == log.num_records  # globally unique event ids
+
+
+class TestRecordCodec:
+    def test_roundtrip(self):
+        log, _ = generate_full_log(jax.random.key(6), CFG, 256)
+        blob = encode_records(
+            np.asarray(log.event_seq), np.asarray(log.shard_hash),
+            np.asarray(log.timestamp), np.asarray(log.site_id),
+            np.asarray(log.entity_id), np.asarray(log.mark))
+        assert len(blob) == 256 * RECORD_BYTES  # paper: exactly 100 B/record
+        dec = decode_records(blob)
+        np.testing.assert_array_equal(dec["site_id"],
+                                      np.asarray(log.site_id))
+        np.testing.assert_array_equal(dec["entity_id"],
+                                      np.asarray(log.entity_id))
+        np.testing.assert_array_equal(dec["timestamp"],
+                                      np.asarray(log.timestamp))
+        np.testing.assert_array_equal(dec["mark"], np.asarray(log.mark))
+        np.testing.assert_array_equal(dec["event_seq"],
+                                      np.asarray(log.event_seq))
+
+    def test_record_is_line_oriented(self):
+        blob = encode_records(np.array([0]), np.array([0xDEADBEEF]),
+                              np.array([0]), np.array([1]), np.array([2]),
+                              np.array([1]))
+        assert blob.endswith(b"\n")
+        assert blob.count(b"|") == 4  # five fixed-width fields
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+def test_property_sharding_never_changes_statistic(seed_int, num_shards):
+    """Generating with different shard counts but identical total records
+    produces logs whose MalStone histograms agree (phase-2 consistency)."""
+    from repro.core import malstone_single_device
+    cfg = MalGenConfig(num_sites=64, num_entities=256,
+                       marked_event_fraction=0.25)
+    total = 1536  # divisible by 2..6 shard counts via rps calc below
+    rps = total // num_shards
+    log_a, _ = generate_sharded_log(jax.random.key(seed_int), cfg, 1,
+                                    rps * num_shards)
+    log_b, _ = generate_sharded_log(jax.random.key(seed_int), cfg,
+                                    num_shards, rps)
+    ra = malstone_single_device(log_a, cfg.num_sites, statistic="A")
+    rb = malstone_single_device(log_b, cfg.num_sites, statistic="A")
+    # marked-event stream identical; unmarked streams differ per shard — the
+    # invariant is the *marked* totals match exactly and totals match in sum
+    assert int(np.asarray(ra.total).sum()) == int(np.asarray(rb.total).sum())

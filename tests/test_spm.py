@@ -1,0 +1,171 @@
+"""Unit + property tests for the SPM statistic (paper Sections 3-4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.types import (
+    EventLog,
+    NEVER_MARKED,
+    SECONDS_PER_WEEK,
+    SECONDS_PER_YEAR,
+    WEEKS_PER_YEAR,
+)
+from repro.core import spm as spm_lib
+
+
+def make_log(site, entity, ts, mark):
+    return EventLog(
+        site_id=jnp.asarray(site, jnp.int32),
+        entity_id=jnp.asarray(entity, jnp.int32),
+        timestamp=jnp.asarray(ts, jnp.int32),
+        mark=jnp.asarray(mark, jnp.int32),
+    )
+
+
+def brute_force_hist(site, entity, ts, mark, num_sites, num_weeks):
+    hist = np.zeros((num_sites, num_weeks, 2), np.int64)
+    for s, e, t, m in zip(site, entity, ts, mark):
+        w = min(t // SECONDS_PER_WEEK, num_weeks - 1)
+        hist[s, w, 0] += 1
+        hist[s, w, 1] += int(m)
+    return hist
+
+
+class TestHistogram:
+    def test_figure2_worked_example(self):
+        """Paper Figure 2: transactions at t_{k-2}, t_{k-1} (one marked),
+        none at t_k -> rho = (1+0+0)/(1+1+0) = 1/2 at window end."""
+        w = SECONDS_PER_WEEK
+        log = make_log([0, 0], [2, 1], [0 * w, 1 * w], [0, 1])
+        hist = spm_lib.site_week_histogram(log, 1, 3)
+        res = spm_lib.malstone_b(hist)
+        np.testing.assert_allclose(np.asarray(res.rho[0]), [0.0, 0.5, 0.5])
+
+    def test_matches_brute_force(self):
+        rng = np.random.default_rng(0)
+        n, s = 5000, 37
+        site = rng.integers(0, s, n)
+        entity = rng.integers(0, 100, n)
+        ts = rng.integers(0, SECONDS_PER_YEAR, n)
+        mark = rng.integers(0, 2, n)
+        log = make_log(site, entity, ts, mark)
+        got = np.asarray(spm_lib.site_week_histogram(log, s))
+        want = brute_force_hist(site, entity, ts, mark, s, WEEKS_PER_YEAR)
+        np.testing.assert_array_equal(got, want)
+
+    def test_valid_mask_excludes_rows(self):
+        log = make_log([0, 0, 0], [0, 1, 2], [0, 0, 0], [1, 1, 1])
+        log = log._replace(valid=jnp.array([True, False, True]))
+        hist = spm_lib.site_week_histogram(log, 1)
+        assert int(hist[0, 0, 0]) == 2
+        assert int(hist[0, 0, 1]) == 2
+
+    def test_site_offset_rebases(self):
+        log = make_log([10, 11, 9], [0, 1, 2], [0, 0, 0], [1, 0, 1])
+        hist = spm_lib.site_week_histogram(log, 2, site_offset=10)
+        assert int(hist[0, 0, 0]) == 1 and int(hist[1, 0, 0]) == 1
+        assert int(hist.sum(axis=(1, 2))[0]) == 2  # site 9 excluded
+
+    def test_year_tail_clamps_to_week_51(self):
+        log = make_log([0], [0], [SECONDS_PER_YEAR - 1], [1])
+        hist = spm_lib.site_week_histogram(log, 1)
+        assert int(hist[0, 51, 0]) == 1
+
+
+class TestFinalizers:
+    def test_malstone_a_ratio(self):
+        hist = jnp.zeros((2, 52, 2), jnp.int32)
+        hist = hist.at[0, 3, 0].set(4).at[0, 3, 1].set(1)
+        hist = hist.at[0, 7, 0].set(4).at[0, 7, 1].set(3)
+        res = spm_lib.malstone_a(hist)
+        np.testing.assert_allclose(np.asarray(res.rho), [0.5, 0.0])
+
+    def test_malstone_b_running_totals(self):
+        hist = jnp.zeros((1, 4, 2), jnp.int32)
+        hist = hist.at[0, 0].set(jnp.array([2, 1]))
+        hist = hist.at[0, 2].set(jnp.array([2, 0]))
+        res = spm_lib.malstone_b(hist)
+        np.testing.assert_allclose(np.asarray(res.rho[0]),
+                                   [0.5, 0.5, 0.25, 0.25])
+
+    def test_malstone_b_fixed_denominator(self):
+        hist = jnp.zeros((1, 4, 2), jnp.int32)
+        hist = hist.at[0, 0].set(jnp.array([2, 1]))
+        hist = hist.at[0, 2].set(jnp.array([2, 1]))
+        res = spm_lib.malstone_b_fixed_denominator(hist)
+        np.testing.assert_allclose(np.asarray(res.rho[0]),
+                                   [0.25, 0.25, 0.5, 0.5])
+
+    def test_final_week_of_b_equals_a(self):
+        rng = np.random.default_rng(1)
+        hist = jnp.asarray(rng.integers(0, 5, (13, 52, 2)))
+        hist = hist.at[..., 1].set(jnp.minimum(hist[..., 1], hist[..., 0]))
+        a = spm_lib.malstone_a(hist)
+        b = spm_lib.malstone_b(hist)
+        np.testing.assert_allclose(np.asarray(b.rho[:, -1]),
+                                   np.asarray(a.rho), rtol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_property_rho_in_unit_interval(n, s, seed):
+    rng = np.random.default_rng(seed)
+    site = rng.integers(0, s, n)
+    ts = rng.integers(0, SECONDS_PER_YEAR, n)
+    mark = rng.integers(0, 2, n)
+    log = make_log(site, np.zeros(n, np.int32), ts, mark)
+    hist = spm_lib.site_week_histogram(log, s)
+    for res in (spm_lib.malstone_a(hist), spm_lib.malstone_b(hist)):
+        rho = np.asarray(res.rho)
+        assert np.all(rho >= 0.0) and np.all(rho <= 1.0)
+        assert not np.any(np.isnan(rho))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 500), st.integers(2, 20), st.integers(0, 2**31 - 1))
+def test_property_permutation_invariance(n, s, seed):
+    """The statistic is a fold over an unordered record set."""
+    rng = np.random.default_rng(seed)
+    site = rng.integers(0, s, n)
+    ts = rng.integers(0, SECONDS_PER_YEAR, n)
+    mark = rng.integers(0, 2, n)
+    perm = rng.permutation(n)
+    h1 = spm_lib.site_week_histogram(
+        make_log(site, np.zeros(n), ts, mark), s)
+    h2 = spm_lib.site_week_histogram(
+        make_log(site[perm], np.zeros(n), ts[perm], mark[perm]), s)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_property_marked_leq_total_and_monotone(n, seed):
+    rng = np.random.default_rng(seed)
+    s = 7
+    site = rng.integers(0, s, n)
+    ts = rng.integers(0, SECONDS_PER_YEAR, n)
+    mark = rng.integers(0, 2, n)
+    hist = spm_lib.site_week_histogram(make_log(site, np.zeros(n), ts, mark), s)
+    res = spm_lib.malstone_b(hist)
+    tot, mkd = np.asarray(res.total), np.asarray(res.marked)
+    assert np.all(mkd <= tot)           # B_j subset A_j
+    assert np.all(np.diff(tot, axis=-1) >= 0)  # running totals monotone
+    assert np.all(np.diff(mkd, axis=-1) >= 0)
+
+
+def test_entity_set_oracle_agrees_on_handmade_case():
+    """Definition 1 with true entity sets on a tiny constructed example."""
+    # entities 0,1 visit site 0 during exposure; entity 0 marked in monitor
+    site = jnp.array([0, 0, 1], jnp.int32)
+    entity = jnp.array([0, 1, 0], jnp.int32)
+    ts = jnp.array([100, 200, 50], jnp.int32)
+    mark_time = jnp.array([1000, NEVER_MARKED], jnp.int32)
+    rho = spm_lib.spm_entity_sets(
+        site, entity, ts, mark_time, num_sites=2,
+        exp_start=0, exp_end=500, mon_start=0, mon_end=2000,
+        num_entities=2)
+    # site 0: A={0,1}, B={0} -> 1/2 ; site 1: A={0}, B={0} -> 1
+    np.testing.assert_allclose(np.asarray(rho), [0.5, 1.0])
