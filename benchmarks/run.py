@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.types import EventLog
-from repro.core import malstone_run
+from repro.core import malstone_run, malstone_run_streaming
 from repro.core.spm import site_week_histogram
 from repro.malgen import (
     MalGenConfig,
@@ -32,6 +32,7 @@ from repro.malgen import (
     generate_shard,
     generate_sharded_log,
     make_seed,
+    make_seed_streaming,
 )
 
 # bench scale (paper scale is exercised via the dry-run; CPU benches are
@@ -102,6 +103,33 @@ def bench_malstone():
                 f"{rps:.4g}_records_per_s")
 
 
+# ------------------------------------------------- streaming chunked engine
+def bench_malstone_streaming():
+    """8x the one-shot bench scale at bounded memory: the log is never
+    materialized — each scan step regenerates one 65,536-record chunk from
+    the seed and folds it into the histogram carry. Peak device footprint is
+    O(chunk + sites x weeks) (~3 MB here) vs ~50 MB of EventLog columns for
+    a materialized 2M-record log."""
+    total = 8 * N_RECORDS            # 2,097,152 records
+    chunk = 65_536
+    num_chunks = total // chunk      # 32
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+
+    us, seed = timeit(
+        lambda: make_seed_streaming(jax.random.key(4), CFG, num_chunks,
+                                    chunk), iters=2, warmup=1)
+    row("malgen_seed_streaming", us, f"{total}_records_covered")
+
+    for backend in ("streams", "sphere", "mapreduce", "mapreduce_combiner"):
+        fn = jax.jit(lambda s, b=backend: malstone_run_streaming(
+            s, CFG.num_sites, mesh=mesh, statistic="B", backend=b,
+            chunk_records=chunk, cfg=CFG, num_chunks=num_chunks).rho)
+        us, _ = timeit(fn, seed, iters=2, warmup=1)
+        rps = total / (us / 1e6)
+        row(f"malstone_b_streaming_{backend}", us,
+            f"{rps:.4g}_records_per_s_at_{total}_records")
+
+
 # ------------------------------------------------------------------ kernels
 def bench_kernels():
     from repro.kernels.segment_hist.ops import segment_hist
@@ -144,6 +172,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_malgen()
     bench_malstone()
+    bench_malstone_streaming()
     bench_kernels()
 
 

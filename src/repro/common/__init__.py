@@ -1,5 +1,7 @@
-"""Shared substrate: array types, pytree helpers, numerics config."""
+"""Shared substrate: array types, pytree helpers, numerics config, jax
+version shims."""
 
+from repro.common.compat import shard_map
 from repro.common.types import (
     EventLog,
     SpmResult,
@@ -11,6 +13,7 @@ from repro.common.types import (
 from repro.common import tree
 
 __all__ = [
+    "shard_map",
     "EventLog",
     "SpmResult",
     "WindowSpec",

@@ -5,6 +5,8 @@
 - ``backends`` — the three middleware dataflows of paper §6 as JAX
                  collectives (streams / sphere / mapreduce).
 - ``runner``   — mesh-level MalStone A & B drivers (shard_map).
+- ``streaming`` — chunked scan engine: paper-scale record counts at
+                 bounded memory (generate-as-you-go or chunked log).
 - ``windows``  — exposure/monitor window algebra (paper §3).
 - ``nodedoctor`` — SPM applied to cluster telemetry (site=host,
                  entity=step, mark=failure) for bad-node attribution.
@@ -21,6 +23,7 @@ from repro.core.spm import (
 from repro.core.runner import (
     malstone_run,
     malstone_run_partitioned,
+    malstone_run_streaming,
     malstone_single_device,
     pad_log_to,
 )
@@ -34,6 +37,7 @@ __all__ = [
     "malstone_b_from_log",
     "malstone_run",
     "malstone_run_partitioned",
+    "malstone_run_streaming",
     "malstone_single_device",
     "pad_log_to",
 ]

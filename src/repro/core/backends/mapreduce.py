@@ -22,6 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import axis_size
 from repro.common.types import EventLog, WEEKS_PER_YEAR
 from repro.core.spm import site_week_histogram
 
@@ -79,7 +80,7 @@ def mapreduce_histogram(log: EventLog,
     local row ``i`` = global site ``i * P + d``. ``num_sites % P == 0``
     required (runner pads).
     """
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     n = log.num_records
     capacity = int(max(1, round(n / p * capacity_factor)))
 
@@ -141,7 +142,7 @@ def mapreduce_combiner_histogram(log: EventLog,
     the combiner turns MapReduce into Sphere's dataflow, which is exactly
     why Sphere won Tables 4/5.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     local = histogram_fn(log, num_sites, num_weeks)   # [S, W, 2]
     # regroup rows so destination d's strided sites (j % P == d) form a
     # contiguous block: row (d, i) = site i * P + d

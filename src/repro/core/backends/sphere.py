@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import axis_size
 from repro.common.types import EventLog, WEEKS_PER_YEAR
 from repro.core.spm import site_week_histogram
 
@@ -37,7 +38,7 @@ def sphere_histogram(log: EventLog,
 
 def owned_site_range(axis_name: str, num_sites: int) -> tuple[jnp.ndarray, int]:
     """(start_site, block_size) for this device's owned block."""
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     block = num_sites // p
     return idx * block, block

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.common.types import EventLog, WEEKS_PER_YEAR
@@ -91,8 +92,8 @@ def diagnose(log: EventLog, num_hosts: int,
     cs = jnp.cumsum(z, axis=-1)
     # min over prefix sums {0, cs_0, ..., cs_t} (inclusive of cs_t so the
     # statistic resets exactly to 0, never below)
-    running_min = jnp.minimum.accumulate(
-        jnp.concatenate([jnp.zeros_like(cs[..., :1]), cs], axis=-1), axis=-1)
+    padded = jnp.concatenate([jnp.zeros_like(cs[..., :1]), cs], axis=-1)
+    running_min = jax.lax.cummin(padded, axis=padded.ndim - 1)
     cusum = cs - running_min[..., 1:]
 
     final = cusum[..., -1]

@@ -15,7 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.common.compat import shard_map
 
 from repro.common.types import EventLog, SpmResult, WEEKS_PER_YEAR
 from repro.core import spm as spm_lib
@@ -48,6 +49,17 @@ def _axis_size(mesh: Mesh, axis_name) -> int:
     for a in axis_name:
         size *= mesh.shape[a]
     return size
+
+
+def _log_pspec(log: EventLog, axis_name) -> EventLog:
+    """Record-dim PartitionSpecs for a log's present columns."""
+    return EventLog(
+        site_id=P(axis_name), entity_id=P(axis_name), timestamp=P(axis_name),
+        mark=P(axis_name),
+        event_seq=None if log.event_seq is None else P(axis_name),
+        shard_hash=None if log.shard_hash is None else P(axis_name),
+        valid=None if log.valid is None else P(axis_name),
+    )
 
 
 def malstone_run(log: EventLog,
@@ -98,18 +110,92 @@ def malstone_run(log: EventLog,
                 s_pad, num_weeks, 2)
         raise ValueError(f"unknown backend {backend!r}")
 
-    spec = EventLog(
-        site_id=P(axis_name), entity_id=P(axis_name), timestamp=P(axis_name),
-        mark=P(axis_name),
-        event_seq=None if log.event_seq is None else P(axis_name),
-        shard_hash=None if log.shard_hash is None else P(axis_name),
-        valid=None if log.valid is None else P(axis_name),
-    )
+    spec = _log_pspec(log, axis_name)
     fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=P(),
                    check_vma=False)
     hist = jax.jit(fn)(log)
     hist = hist[:num_sites]
     return _finalize(hist, statistic)
+
+
+def malstone_run_streaming(seed_or_log, num_sites: int, *,
+                           mesh: Mesh,
+                           backend: str = "streams",
+                           chunk_records: int = 65_536,
+                           statistic: str = "B",
+                           cfg=None,
+                           num_chunks: Optional[int] = None,
+                           num_weeks: int = WEEKS_PER_YEAR,
+                           axis_name="data",
+                           capacity_factor: float = 2.0,
+                           histogram_fn=None) -> SpmResult:
+    """Streaming chunked MalStone: ``lax.scan`` over fixed-size record
+    chunks with a histogram carry — peak memory O(chunk + sites x weeks)
+    instead of O(records). Bit-identical integer histograms to
+    ``malstone_run`` (the site x week histogram is a commutative monoid, so
+    chunk accumulation is exact). Exception: the ``mapreduce`` backend's
+    per-chunk shuffle has fixed-capacity buckets and drops (and counts)
+    overflow just like the one-shot path — pass ``capacity_factor >= P``
+    for a provably lossless shuffle (see streaming.py's capacity caveat);
+    the other three backends are unconditionally exact.
+
+    Two modes, selected by the first argument:
+
+    - ``SeedInfo`` (from ``make_seed_streaming``): generate-as-you-go — each
+      scan step regenerates its chunk from the seed; requires ``cfg`` (the
+      ``MalGenConfig``) and ``num_chunks`` (must divide evenly over the
+      mesh). Equivalent one-shot oracle: ``malstone_run`` over
+      ``generate_chunked_log(seed, cfg, num_chunks, chunk_records)``.
+    - ``EventLog``: chunked pass over a pre-generated log; the log is padded
+      with invalid rows so every device scans whole chunks (uneven final
+      chunks are handled exactly).
+    """
+    from repro.core.streaming import (
+        streaming_histogram_from_log,
+        streaming_histogram_generate,
+    )
+    from repro.malgen.seeding import SeedInfo
+
+    parts = _axis_size(mesh, axis_name)
+    s_pad = _pad_sites(num_sites, parts)
+
+    if isinstance(seed_or_log, SeedInfo):
+        if cfg is None or num_chunks is None:
+            raise ValueError("seed mode requires cfg= and num_chunks=")
+        if num_chunks % parts != 0:
+            raise ValueError(
+                f"num_chunks ({num_chunks}) must divide over the mesh "
+                f"({parts} devices)")
+        seed = seed_or_log
+        cpd = num_chunks // parts
+
+        def run_gen() -> jnp.ndarray:
+            return streaming_histogram_generate(
+                seed, cfg, s_pad, chunks_per_device=cpd,
+                chunk_records=chunk_records, num_weeks=num_weeks,
+                axis_name=axis_name, backend=backend,
+                histogram_fn=histogram_fn, capacity_factor=capacity_factor)
+
+        fn = shard_map(run_gen, mesh=mesh, in_specs=(), out_specs=P(),
+                       check_vma=False)
+        hist = jax.jit(fn)()
+    else:
+        log = seed_or_log
+        per_dev = -(-log.num_records // (parts * chunk_records)) * chunk_records
+        log = pad_log_to(log, per_dev * parts)
+
+        def run_log(log_shard: EventLog) -> jnp.ndarray:
+            return streaming_histogram_from_log(
+                log_shard, s_pad, chunk_records=chunk_records,
+                num_weeks=num_weeks, axis_name=axis_name, backend=backend,
+                histogram_fn=histogram_fn, capacity_factor=capacity_factor)
+
+        spec = _log_pspec(log, axis_name)
+        fn = shard_map(run_log, mesh=mesh, in_specs=(spec,), out_specs=P(),
+                       check_vma=False)
+        hist = jax.jit(fn)(log)
+
+    return _finalize(hist[:num_sites], statistic)
 
 
 def malstone_run_partitioned(log: EventLog,
@@ -132,13 +218,7 @@ def malstone_run_partitioned(log: EventLog,
         owned = sphere_histogram(log_shard, s_pad, num_weeks, axis_name)
         return _finalize(owned, statistic)
 
-    spec = EventLog(
-        site_id=P(axis_name), entity_id=P(axis_name), timestamp=P(axis_name),
-        mark=P(axis_name),
-        event_seq=None if log.event_seq is None else P(axis_name),
-        shard_hash=None if log.shard_hash is None else P(axis_name),
-        valid=None if log.valid is None else P(axis_name),
-    )
+    spec = _log_pspec(log, axis_name)
     out_spec = SpmResult(rho=P(axis_name), total=P(axis_name),
                          marked=P(axis_name))
     fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=out_spec,

@@ -1,0 +1,166 @@
+"""Streaming chunked MalStone execution — paper scale at bounded memory.
+
+The one-shot drivers in ``runner.py`` materialize the whole ``EventLog`` on
+device before any backend runs, which caps the benchmark far below the
+paper's classes (B-10 = 10 billion 100-byte records). This module runs the
+same statistic as a ``jax.lax.scan`` over fixed-size record chunks with a
+histogram carry: per scan step the device either *regenerates* its next
+chunk from the MalGen seed (generate-as-you-go — the log is never
+materialized) or slices it from a pre-generated shard, folds the chunk into
+the carry with the chosen backend's dataflow, and moves on. Peak memory is
+O(chunk + sites x weeks), independent of the global record count; the scan
+carry is buffer-donated by XLA, so the histogram is accumulated in place.
+
+Exactness: the site x week histogram is a commutative monoid (integer
+segment sums), so chunk-wise accumulation is *bit-identical* to the one-shot
+path for every backend — tests assert exact integer equality, not allclose.
+
+Backend dataflows inside the scan (all run INSIDE ``shard_map``):
+
+- ``streams`` / ``sphere``: local combine per chunk into a full-site carry;
+  ONE collective after the scan (psum, resp. psum_scatter + all_gather) —
+  the local-combine-first structure is exactly why these stacks won the
+  paper's Tables 4/5, and it streams for free.
+- ``mapreduce`` / ``mapreduce_combiner``: the shuffle happens *per chunk*
+  inside the scan body (fixed-capacity bucketed all_to_all, resp. combiner
+  block exchange), accumulating each device's owned strided site block; one
+  all_gather + unstride after the scan. This keeps the defining
+  every-record-crosses-the-network (resp. histogram-slices-cross) cost while
+  bounding the in-flight buffer to one chunk.
+
+Capacity caveat (``mapreduce`` only): the per-chunk shuffle buckets hold
+``chunk_records / P * capacity_factor`` records each, and small chunks see
+relatively more power-law skew than a whole shard — overflow drops records
+(counted, same as the one-shot path). For guaranteed-lossless streaming use
+``capacity_factor >= P`` (worst case: the entire chunk routes to one
+reducer); the exactness tests do exactly that.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.compat import axis_size
+from repro.common.types import EventLog, WEEKS_PER_YEAR
+from repro.core import spm as spm_lib
+from repro.core.backends import (
+    mapreduce_histogram,
+    sphere_histogram,  # noqa: F401  (re-exported for symmetry)
+    streams_histogram,  # noqa: F401
+)
+from repro.core.backends.mapreduce import mapreduce_combiner_histogram
+from repro.malgen.generator import generate_chunk
+from repro.malgen.seeding import MalGenConfig, SeedInfo
+
+STREAM_BACKENDS = ("streams", "sphere", "mapreduce", "mapreduce_combiner")
+
+
+def _carry_init(backend: str, s_pad: int, num_weeks: int,
+                axis_name) -> jnp.ndarray:
+    """Zero histogram carry in the backend's accumulation layout."""
+    if backend in ("streams", "sphere"):
+        return jnp.zeros((s_pad, num_weeks, 2), jnp.int32)
+    if backend in ("mapreduce", "mapreduce_combiner"):
+        p = axis_size(axis_name)
+        return jnp.zeros((s_pad // p, num_weeks, 2), jnp.int32)
+    raise ValueError(f"unknown streaming backend {backend!r}")
+
+
+def _accumulate_chunk(carry: jnp.ndarray, chunk: EventLog, backend: str,
+                      s_pad: int, num_weeks: int, axis_name,
+                      histogram_fn, capacity_factor: float) -> jnp.ndarray:
+    """Fold one chunk into the carry using the backend's dataflow."""
+    if backend in ("streams", "sphere"):
+        # local combine only; the cross-device collective runs post-scan
+        return carry + histogram_fn(chunk, s_pad, num_weeks)
+    if backend == "mapreduce":
+        owned, _ = mapreduce_histogram(
+            chunk, s_pad, num_weeks, axis_name,
+            capacity_factor=capacity_factor, histogram_fn=histogram_fn)
+        return carry + owned
+    if backend == "mapreduce_combiner":
+        owned = mapreduce_combiner_histogram(
+            chunk, s_pad, num_weeks, axis_name, histogram_fn=histogram_fn)
+        return carry + owned
+    raise ValueError(f"unknown streaming backend {backend!r}")
+
+
+def _post_scan_collective(carry: jnp.ndarray, backend: str, s_pad: int,
+                          num_weeks: int, axis_name) -> jnp.ndarray:
+    """Turn the per-device carry into the replicated full-site histogram,
+    matching ``malstone_run``'s layout exactly."""
+    if backend == "streams":
+        return jax.lax.psum(carry, axis_name)
+    if backend == "sphere":
+        owned = jax.lax.psum_scatter(carry, axis_name, scatter_dimension=0,
+                                     tiled=True)
+        return jax.lax.all_gather(owned, axis_name, axis=0, tiled=True)
+    # mapreduce*: carry rows are strided (site = row * P + d): gather+unstride
+    gathered = jax.lax.all_gather(carry, axis_name, axis=0)  # [P, S/P, W, 2]
+    return jnp.transpose(gathered, (1, 0, 2, 3)).reshape(s_pad, num_weeks, 2)
+
+
+def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
+                                 chunk_records: int,
+                                 num_weeks: int = WEEKS_PER_YEAR,
+                                 axis_name="data",
+                                 backend: str = "streams",
+                                 histogram_fn=None,
+                                 capacity_factor: float = 2.0) -> jnp.ndarray:
+    """Chunked histogram over a materialized (per-device) log shard.
+
+    Runs INSIDE ``shard_map``. The shard's record dim must be divisible by
+    ``chunk_records`` (the runner pads with invalid rows). Returns the
+    replicated ``[s_pad, num_weeks, 2]`` histogram.
+    """
+    hist_fn = histogram_fn or spm_lib.site_week_histogram
+    n = log_shard.num_records
+    assert n % chunk_records == 0, (n, chunk_records)
+    num_chunks = n // chunk_records
+
+    def to_chunks(col):
+        return None if col is None else col.reshape(num_chunks, chunk_records)
+
+    chunks = EventLog(*(to_chunks(col) for col in log_shard))
+
+    def step(carry, chunk):
+        return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
+                                 axis_name, hist_fn, capacity_factor), None
+
+    carry, _ = jax.lax.scan(
+        step, _carry_init(backend, s_pad, num_weeks, axis_name), chunks)
+    return _post_scan_collective(carry, backend, s_pad, num_weeks, axis_name)
+
+
+def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
+                                 s_pad: int,
+                                 chunks_per_device: int,
+                                 chunk_records: int,
+                                 num_weeks: int = WEEKS_PER_YEAR,
+                                 axis_name="data",
+                                 backend: str = "streams",
+                                 histogram_fn=None,
+                                 capacity_factor: float = 2.0) -> jnp.ndarray:
+    """Generate-as-you-go chunked histogram: each scan step regenerates its
+    chunk from the seed (``generate_chunk`` is a pure function of
+    (seed, chunk_id)) — the log never exists in memory.
+
+    Runs INSIDE ``shard_map``. Device ``d`` owns the contiguous chunk block
+    ``[d * chunks_per_device, (d+1) * chunks_per_device)`` — the same layout
+    ``generate_chunked_log`` materializes, so results are bit-identical to
+    running the one-shot path over that log. Returns the replicated
+    ``[s_pad, num_weeks, 2]`` histogram.
+    """
+    hist_fn = histogram_fn or spm_lib.site_week_histogram
+    first_chunk = jax.lax.axis_index(axis_name) * chunks_per_device
+
+    def step(carry, c):
+        chunk = generate_chunk(seed, cfg, first_chunk + c, chunk_records)
+        return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
+                                 axis_name, hist_fn, capacity_factor), None
+
+    carry, _ = jax.lax.scan(
+        step, _carry_init(backend, s_pad, num_weeks, axis_name),
+        jnp.arange(chunks_per_device, dtype=jnp.int32))
+    return _post_scan_collective(carry, backend, s_pad, num_weeks, axis_name)

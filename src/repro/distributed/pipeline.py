@@ -21,8 +21,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,6 +4,11 @@
         --nodes 8 --records-per-node 262144 --sites 10000 \
         --backend sphere --statistic B
 
+``--stream-chunks N`` switches to the streaming chunked engine: each node
+regenerates its records N chunks at a time from the MalGen seed inside a
+``lax.scan`` (the log is never materialized), so ``--records-per-node`` can
+exceed device memory. N must divide ``--records-per-node``.
+
 Multi-node on one host uses forced host devices; set ``--nodes`` BEFORE any
 other jax usage (this module sets XLA_FLAGS at import like dryrun).
 """
@@ -33,8 +38,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import malstone_run
-from repro.malgen import MalGenConfig, generate_sharded_log
+from repro.core import malstone_run, malstone_run_streaming
+from repro.malgen import MalGenConfig, generate_sharded_log, make_seed_streaming
 
 
 def main():
@@ -44,36 +49,68 @@ def main():
     ap.add_argument("--sites", type=int, default=10_000)
     ap.add_argument("--entities", type=int, default=100_000)
     ap.add_argument("--backend", default="sphere",
-                    choices=("streams", "sphere", "mapreduce"))
+                    choices=("streams", "sphere", "mapreduce",
+                             "mapreduce_combiner"))
     ap.add_argument("--statistic", default="B", choices=("A", "B"))
     ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--stream-chunks", type=int, default=0, metavar="N",
+                    help="stream each node's records in N regenerated chunks"
+                         " (0 = one-shot materialized log)")
     args = ap.parse_args()
 
     mesh = jax.make_mesh((args.nodes,), ("data",))
     cfg = MalGenConfig(num_sites=args.sites, num_entities=args.entities)
-
     total = args.nodes * args.records_per_node
-    print(f"MalGen: {total:,} records ({total * 100 / 1e6:.0f} MB logical) "
-          f"over {args.nodes} nodes")
-    t0 = time.perf_counter()
-    log, _ = generate_sharded_log(jax.random.key(0), cfg, args.nodes,
-                                  args.records_per_node)
-    jax.block_until_ready(log.site_id)
-    print(f"  generated in {time.perf_counter() - t0:.1f}s")
 
-    fn = jax.jit(lambda l: malstone_run(
-        l, cfg.num_sites, mesh=mesh, statistic=args.statistic,
-        backend=args.backend).rho)
-    fn(log).block_until_ready()
+    if args.stream_chunks:
+        if args.records_per_node % args.stream_chunks:
+            ap.error("--stream-chunks must divide --records-per-node")
+        chunk = args.records_per_node // args.stream_chunks
+        num_chunks = args.nodes * args.stream_chunks
+        print(f"MalGen (streaming): {total:,} records "
+              f"({total * 100 / 1e6:.0f} MB logical) over {args.nodes} nodes"
+              f" x {args.stream_chunks} chunks of {chunk:,} — "
+              f"log never materialized")
+        t0 = time.perf_counter()
+        seed = make_seed_streaming(jax.random.key(0), cfg, num_chunks, chunk)
+        jax.block_until_ready(seed.entity_mark_time)
+        print(f"  seeded in {time.perf_counter() - t0:.1f}s "
+              f"(scatter payload {seed.seed_bytes / 1e6:.1f} MB)")
+
+        # capacity_factor = nodes makes the per-chunk mapreduce shuffle
+        # provably lossless (worst case: a whole chunk routes to one
+        # reducer), so every backend stays exact under streaming.
+        fn = jax.jit(lambda s: malstone_run_streaming(
+            s, cfg.num_sites, mesh=mesh, backend=args.backend,
+            chunk_records=chunk, statistic=args.statistic, cfg=cfg,
+            num_chunks=num_chunks,
+            capacity_factor=float(args.nodes)).rho)
+        run_args = (seed,)
+    else:
+        print(f"MalGen: {total:,} records ({total * 100 / 1e6:.0f} MB "
+              f"logical) over {args.nodes} nodes")
+        t0 = time.perf_counter()
+        log, _ = generate_sharded_log(jax.random.key(0), cfg, args.nodes,
+                                      args.records_per_node)
+        jax.block_until_ready(log.site_id)
+        print(f"  generated in {time.perf_counter() - t0:.1f}s")
+
+        fn = jax.jit(lambda l: malstone_run(
+            l, cfg.num_sites, mesh=mesh, statistic=args.statistic,
+            backend=args.backend).rho)
+        run_args = (log,)
+
+    fn(*run_args).block_until_ready()
     times = []
     for r in range(args.runs):
         t0 = time.perf_counter()
-        rho = fn(log)
+        rho = fn(*run_args)
         rho.block_until_ready()
         times.append(time.perf_counter() - t0)
         print(f"  run {r + 1}: {times[-1] * 1e3:.1f} ms "
               f"({total / times[-1] / 1e6:.1f}M records/s)")
-    print(f"MalStone {args.statistic} [{args.backend}] "
+    mode = f"stream x{args.stream_chunks}" if args.stream_chunks else "one-shot"
+    print(f"MalStone {args.statistic} [{args.backend}, {mode}] "
           f"avg {np.mean(times) * 1e3:.1f} ms")
 
 

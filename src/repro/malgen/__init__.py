@@ -16,11 +16,20 @@ Three-phase protocol, exactly as the paper describes:
 """
 
 from repro.malgen.powerlaw import power_law_weights, power_law_cdf, sample_sites
-from repro.malgen.seeding import MalGenConfig, SeedInfo, make_seed
+from repro.malgen.seeding import (
+    MalGenConfig,
+    SeedInfo,
+    chunk_marked_records,
+    make_seed,
+    make_seed_streaming,
+)
 from repro.malgen.generator import (
-    generate_shard,
+    generate_chunk,
+    generate_chunked_log,
     generate_full_log,
+    generate_shard,
     generate_sharded_log,
+    generate_streaming_log,
 )
 from repro.malgen.records import encode_records, decode_records, RECORD_BYTES
 
@@ -30,10 +39,15 @@ __all__ = [
     "sample_sites",
     "MalGenConfig",
     "SeedInfo",
+    "chunk_marked_records",
     "make_seed",
-    "generate_shard",
+    "make_seed_streaming",
+    "generate_chunk",
+    "generate_chunked_log",
     "generate_full_log",
+    "generate_shard",
     "generate_sharded_log",
+    "generate_streaming_log",
     "encode_records",
     "decode_records",
     "RECORD_BYTES",

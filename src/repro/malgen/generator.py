@@ -18,7 +18,13 @@ import jax.numpy as jnp
 
 from repro.common.types import EventLog
 from repro.malgen.powerlaw import sample_sites_masked
-from repro.malgen.seeding import MalGenConfig, SeedInfo, marked_event_stream
+from repro.malgen.seeding import (
+    MalGenConfig,
+    SeedInfo,
+    chunk_keys,
+    chunk_marked_records,
+    marked_event_stream,
+)
 
 
 def _fnv1a32(text: str) -> int:
@@ -70,6 +76,16 @@ def generate_shard(seed: SeedInfo, cfg: MalGenConfig,
                     event_seq=event_seq, shard_hash=shard_hash)
 
 
+def _concat_logs(parts: list[EventLog]) -> EventLog:
+    """Column-wise concat of per-shard/per-chunk logs (None columns stay
+    None)."""
+    return EventLog(*[
+        None if parts[0][i] is None
+        else jnp.concatenate([p[i] for p in parts])
+        for i in range(len(parts[0]))
+    ])
+
+
 def generate_sharded_log(key: jax.Array, cfg: MalGenConfig,
                          num_shards: int, records_per_shard: int
                          ) -> tuple[EventLog, SeedInfo]:
@@ -82,17 +98,101 @@ def generate_sharded_log(key: jax.Array, cfg: MalGenConfig,
     from repro.malgen.seeding import make_seed
     total = num_shards * records_per_shard
     seed = make_seed(key, cfg, total)
-    shards = [generate_shard(seed, cfg, s, num_shards, records_per_shard)
-              for s in range(num_shards)]
-    log = EventLog(*[
-        None if shards[0][i] is None
-        else jnp.concatenate([sh[i] for sh in shards])
-        for i in range(len(shards[0]))
-    ])
-    return log, seed
+    return _concat_logs(
+        [generate_shard(seed, cfg, s, num_shards, records_per_shard)
+         for s in range(num_shards)]), seed
 
 
 def generate_full_log(key: jax.Array, cfg: MalGenConfig,
                       total_records: int) -> tuple[EventLog, SeedInfo]:
     """Single-shard convenience wrapper (tests, quickstart)."""
     return generate_sharded_log(key, cfg, 1, total_records)
+
+
+# ----------------------------------------------------------------------------
+# Chunk-keyed generation — the streaming engine's phase 3.
+#
+# ``generate_shard`` above computes shard-dependent *shapes* in Python (its
+# strided slice of the marked stream varies per shard), so it cannot be traced
+# with a dynamic shard id inside ``lax.scan``. ``generate_chunk`` is the
+# scan-friendly counterpart: every chunk has the same static layout (the first
+# ``chunk_marked_records(cfg, C)`` rows are marked-site traffic, the rest
+# unmarked), and ALL randomness comes from ``chunk_keys(seed.key, chunk_id)``
+# — a pure, traceable function of the chunk index. The pairing
+# ``make_seed_streaming``/``generate_chunk`` replaces
+# ``make_seed``/``generate_shard`` when the log must never be materialized.
+# ----------------------------------------------------------------------------
+
+def _mix32(x) -> jnp.ndarray:
+    """Murmur3 finalizer — a traceable stand-in for the hostname hash of the
+    paper's Event ID scheme when the shard id is a traced chunk index."""
+    x = jnp.asarray(x).astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    x *= jnp.uint32(0xC2B2AE35)
+    x ^= x >> 16
+    return x
+
+
+def generate_chunk(seed: SeedInfo, cfg: MalGenConfig,
+                   chunk_id, records_per_chunk: int) -> EventLog:
+    """One fixed-size chunk; ``chunk_id`` may be a traced int32.
+
+    ``seed`` must come from ``make_seed_streaming`` with the same
+    ``records_per_chunk`` (the mark table is derived from the same per-chunk
+    keys). Memory is O(records_per_chunk) regardless of the global log size.
+    """
+    c = records_per_chunk
+    n_marked = chunk_marked_records(cfg, c)
+    (k_msite, k_ment, k_mts, _bern,
+     k_usite, k_uent, k_uts) = chunk_keys(seed.key, chunk_id)
+
+    m_site = sample_sites_masked(k_msite, seed.site_weights,
+                                 seed.marked_mask, n_marked)
+    m_entity = jax.random.randint(k_ment, (n_marked,), 0, cfg.num_entities,
+                                  dtype=jnp.int32)
+    m_ts = jax.random.randint(k_mts, (n_marked,), 0, cfg.span_seconds,
+                              dtype=jnp.int32)
+
+    n_unmarked = c - n_marked
+    u_site = sample_sites_masked(k_usite, seed.site_weights,
+                                 ~seed.marked_mask, n_unmarked)
+    u_entity = jax.random.randint(k_uent, (n_unmarked,), 0, cfg.num_entities,
+                                  dtype=jnp.int32)
+    u_ts = jax.random.randint(k_uts, (n_unmarked,), 0, cfg.span_seconds,
+                              dtype=jnp.int32)
+
+    site = jnp.concatenate([m_site, u_site])
+    entity = jnp.concatenate([m_entity, u_entity])
+    ts = jnp.concatenate([m_ts, u_ts])
+
+    # joined mark flag (paper §4)
+    mark = (seed.entity_mark_time[entity] <= ts).astype(jnp.int32)
+
+    shard_hash = jnp.full((c,), 1, jnp.uint32) * _mix32(chunk_id)
+    event_seq = jnp.arange(c, dtype=jnp.uint32)
+    return EventLog(site_id=site, entity_id=entity, timestamp=ts, mark=mark,
+                    event_seq=event_seq, shard_hash=shard_hash)
+
+
+def generate_chunked_log(seed: SeedInfo, cfg: MalGenConfig,
+                         num_chunks: int, records_per_chunk: int) -> EventLog:
+    """Materialize the chunk-keyed log (chunks concatenated in chunk order).
+
+    This is the oracle for the streaming engine's bit-identity tests: running
+    ``malstone_run`` over this log must agree exactly with
+    ``malstone_run_streaming`` over the bare seed, because both observe the
+    same per-chunk pure function — here eagerly, there inside a scan.
+    """
+    return _concat_logs([generate_chunk(seed, cfg, i, records_per_chunk)
+                         for i in range(num_chunks)])
+
+
+def generate_streaming_log(key: jax.Array, cfg: MalGenConfig,
+                           num_chunks: int, records_per_chunk: int
+                           ) -> tuple[EventLog, SeedInfo]:
+    """Convenience: streaming seed + materialized chunk-keyed log."""
+    from repro.malgen.seeding import make_seed_streaming
+    seed = make_seed_streaming(key, cfg, num_chunks, records_per_chunk)
+    return generate_chunked_log(seed, cfg, num_chunks, records_per_chunk), seed

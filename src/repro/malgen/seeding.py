@@ -59,10 +59,10 @@ class SeedInfo(NamedTuple):
                 + self.site_weights.size * 4 + 32)
 
 
-def make_seed(key: jax.Array, cfg: MalGenConfig,
-              total_records: int) -> SeedInfo:
-    """Phase 1. ``total_records`` is the global record budget; the marked
-    stream gets ``round(total * marked_event_fraction)`` events."""
+def _site_tables(key: jax.Array, cfg: MalGenConfig):
+    """(k_events, site_weights, marked_mask) — shared by both seeding paths
+    so a given root key yields identical site popularity / marked-site sets
+    whether the log is later generated shard-wise or chunk-wise."""
     k_perm, k_marked, k_events = jax.random.split(key, 3)
 
     # Popularity decoupled from site id ordering.
@@ -74,6 +74,14 @@ def make_seed(key: jax.Array, cfg: MalGenConfig,
     marked_ids = jax.random.choice(
         k_marked, cfg.num_sites, shape=(cfg.num_marked_sites,), replace=False)
     marked_mask = jnp.zeros((cfg.num_sites,), bool).at[marked_ids].set(True)
+    return k_events, weights, marked_mask
+
+
+def make_seed(key: jax.Array, cfg: MalGenConfig,
+              total_records: int) -> SeedInfo:
+    """Phase 1. ``total_records`` is the global record budget; the marked
+    stream gets ``round(total * marked_event_fraction)`` events."""
+    k_events, weights, marked_mask = _site_tables(key, cfg)
 
     num_marked_events = max(1, int(round(total_records * cfg.marked_event_fraction)))
     entity_mark_time = _derive_mark_table(
@@ -107,6 +115,81 @@ def _marked_events(k_events, cfg, weights, marked_mask, num_events):
     return site, entity, ts
 
 
+# ----------------------------------------------------------------------------
+# Streaming (chunk-keyed) seeding — the generate-as-you-go engine's phase 1.
+#
+# The one-shot path above materializes the full global marked-event stream to
+# derive the mark table. At paper scale (B-10 = 10 billion records) even the
+# head node cannot hold that stream, so the streaming path re-keys ALL
+# randomness per fixed-size chunk (``fold_in(key, chunk_id)``) and derives the
+# entity mark table with a min-accumulating ``lax.scan`` over chunks: memory
+# is O(num_entities + chunk), never O(records). ``generate_chunk`` (see
+# generator.py) regenerates any chunk from the same per-chunk keys, so the
+# log is a pure function of (seed, chunk_id) — phase 2's scatter stays a
+# seed, exactly as the paper prescribes.
+# ----------------------------------------------------------------------------
+
+def chunk_marked_records(cfg: MalGenConfig, records_per_chunk: int) -> int:
+    """Marked-site rows per chunk (static — every chunk gets the same)."""
+    n = int(round(records_per_chunk * cfg.marked_event_fraction))
+    return max(0, min(records_per_chunk, n))
+
+
+def chunk_keys(root_key: jax.Array, chunk_id):
+    """Per-chunk PRNG keys; ``chunk_id`` may be a traced int32.
+
+    Single source of truth for the split layout — ``make_seed_streaming``
+    (mark-table derivation) and ``generate_chunk`` (record generation) must
+    draw the marked rows from the same keys or the joined mark flags would
+    not correspond to the marking visits.
+    Returns (k_marked_site, k_marked_entity, k_marked_ts, k_bernoulli,
+    k_unmarked_site, k_unmarked_entity, k_unmarked_ts).
+    """
+    k = jax.random.fold_in(root_key, chunk_id)
+    return tuple(jax.random.split(k, 7))
+
+
+def make_seed_streaming(key: jax.Array, cfg: MalGenConfig,
+                        num_chunks: int, records_per_chunk: int) -> SeedInfo:
+    """Phase 1 for the streaming engine: bounded-memory mark-table derivation.
+
+    Scans the chunk index space, regenerating only each chunk's marked rows
+    and folding the earliest marking visit per entity into a carry — the
+    chunk records themselves are never stored. The returned ``SeedInfo`` is
+    layout-bound: it corresponds to the log produced by ``generate_chunk``
+    over ``chunk_id in [0, num_chunks)`` at this ``records_per_chunk``.
+    """
+    _, weights, marked_mask = _site_tables(key, cfg)
+    n_marked = chunk_marked_records(cfg, records_per_chunk)
+
+    def step(earliest, chunk_id):
+        _, k_ent, k_ts, k_bern, _, _, _ = chunk_keys(key, chunk_id)
+        entity = jax.random.randint(k_ent, (n_marked,), 0, cfg.num_entities,
+                                    dtype=jnp.int32)
+        ts = jax.random.randint(k_ts, (n_marked,), 0, cfg.span_seconds,
+                                dtype=jnp.int32)
+        marks_entity = jax.random.bernoulli(k_bern, cfg.p_mark, (n_marked,))
+        visit_ts = jnp.where(marks_entity, ts, NEVER_MARKED)
+        return earliest.at[entity].min(visit_ts), None
+
+    init = jnp.full((cfg.num_entities,), NEVER_MARKED, jnp.int32)
+    earliest, _ = jax.lax.scan(step, init,
+                               jnp.arange(num_chunks, dtype=jnp.int32))
+    mark_time = _apply_mark_delay(earliest, cfg)
+
+    return SeedInfo(key=key, marked_mask=marked_mask,
+                    entity_mark_time=mark_time, site_weights=weights,
+                    num_marked_events=num_chunks * n_marked)
+
+
+def _apply_mark_delay(earliest: jnp.ndarray, cfg: MalGenConfig) -> jnp.ndarray:
+    """earliest marking visit -> mark time, guarding int32 overflow of
+    ``earliest + mark_delay`` for never-marked entities (dtype-max fill)."""
+    return jnp.where(
+        earliest >= NEVER_MARKED - cfg.mark_delay, NEVER_MARKED,
+        earliest + cfg.mark_delay).astype(jnp.int32)
+
+
 def _derive_mark_table(k_events, cfg, weights, marked_mask, num_events):
     site, entity, ts = _marked_events(k_events, cfg, weights, marked_mask,
                                       num_events)
@@ -118,7 +201,4 @@ def _derive_mark_table(k_events, cfg, weights, marked_mask, num_events):
     earliest = jax.ops.segment_min(visit_ts, entity,
                                    num_segments=cfg.num_entities)
     # segment_min fills empty segments with +inf equivalent (dtype max)
-    mark_time = jnp.where(
-        earliest >= NEVER_MARKED - cfg.mark_delay, NEVER_MARKED,
-        earliest + cfg.mark_delay).astype(jnp.int32)
-    return mark_time
+    return _apply_mark_delay(earliest, cfg)

@@ -1,0 +1,78 @@
+"""Multi-device streaming-engine equivalence check — run as a subprocess
+with 8 forced host devices (tests/test_streaming.py drives this; the main
+pytest process must stay single-device)."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+import jax
+import numpy as np
+
+from repro.core import malstone_run, malstone_run_streaming
+from repro.malgen import (
+    MalGenConfig,
+    generate_chunked_log,
+    generate_sharded_log,
+    make_seed_streaming,
+)
+
+BACKENDS = ("streams", "sphere", "mapreduce", "mapreduce_combiner")
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+    mesh = jax.make_mesh((8,), ("data",))
+
+    cfg = MalGenConfig(num_sites=301, num_entities=1000,
+                       marked_site_fraction=0.2, marked_event_fraction=0.3)
+    key = jax.random.key(11)
+    num_chunks, chunk = 32, 512  # 4 chunks per device
+    seed = make_seed_streaming(key, cfg, num_chunks, chunk)
+    log = generate_chunked_log(seed, cfg, num_chunks, chunk)
+
+    # Seed mode (generate-as-you-go) vs one-shot over the materialized log.
+    for backend in BACKENDS:
+        for stat in ("A", "B"):
+            ref = malstone_run(log, cfg.num_sites, mesh=mesh, statistic=stat,
+                               backend=backend, capacity_factor=8.0)
+            got = malstone_run_streaming(
+                seed, cfg.num_sites, mesh=mesh, backend=backend,
+                chunk_records=chunk, statistic=stat, cfg=cfg,
+                num_chunks=num_chunks, capacity_factor=8.0)
+            np.testing.assert_array_equal(
+                np.asarray(got.total), np.asarray(ref.total),
+                err_msg=f"seed-mode {backend}/{stat}: totals differ")
+            np.testing.assert_array_equal(
+                np.asarray(got.marked), np.asarray(ref.marked),
+                err_msg=f"seed-mode {backend}/{stat}: marked differ")
+        print(f"OK seed-mode backend={backend}")
+
+    # Log mode over a generate_shard-layout log (the pre-generated-data
+    # variant), including a record count that does not divide chunk size.
+    slog, _ = generate_sharded_log(jax.random.key(3), cfg, 8, 2048)
+    odd = jax.tree.map(lambda x: x[:10_000], slog)
+    for backend in BACKENDS:
+        # capacity_factor = 8 (= P) makes the per-chunk mapreduce shuffle
+        # provably lossless, so exact equality is well-defined (see
+        # streaming.py's capacity caveat).
+        ref = malstone_run(odd, cfg.num_sites, mesh=mesh, statistic="B",
+                           backend=backend, capacity_factor=8.0)
+        got = malstone_run_streaming(
+            odd, cfg.num_sites, mesh=mesh, backend=backend,
+            chunk_records=512, statistic="B", capacity_factor=8.0)
+        np.testing.assert_array_equal(
+            np.asarray(got.total), np.asarray(ref.total),
+            err_msg=f"log-mode {backend}: totals differ")
+        np.testing.assert_array_equal(
+            np.asarray(got.marked), np.asarray(ref.marked),
+            err_msg=f"log-mode {backend}: marked differ")
+        print(f"OK log-mode backend={backend}")
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()
