@@ -26,6 +26,14 @@ memory terms reported here are therefore upper bounds.
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
                                                     [--md results/roofline.md]
+                                                    [--bench-json NAME]
+
+``--bench-json NAME`` additionally writes the per-cell dominant-bound
+times as a ``BENCH_<NAME>.json`` (schema: ``repro/bench/schema.py``,
+scenario ``roofline_<cell>``). These are *analytic* model times derived
+deterministically from compiled HLO, so ``repro.bench.compare`` with a
+tight tolerance (e.g. 0.01) turns any byte-movement change in a backend's
+collective structure into a CI-visible diff.
 """
 
 from __future__ import annotations
@@ -97,10 +105,36 @@ HINTS = {
 }
 
 
+def write_bench_json(rows: list, name: str) -> "pathlib.Path":
+    """Emit analytic roofline terms in the stable BENCH_*.json schema."""
+    from repro.bench import schema
+    from repro.bench.timing import TimingResult
+
+    doc = schema.new_document(name, env={"source": "roofline-analytic"})
+    for r in sorted(rows, key=lambda r: r["cell"]):
+        us = r[f"t_{r['dominant']}_s"] * 1e6
+        timing = TimingResult(
+            us_per_call=us, us_min=us, us_mean=us, us_std=0.0,
+            rel_dispersion=0.0, samples_us=(us,), warmup_iters=0, iters=1,
+            steady=True)
+        schema.add_result(
+            doc, f"roofline_{r['cell']}",
+            {"devices": r["devices"], "dominant": r["dominant"],
+             "analytic": True},
+            timing,
+            derived={k: r[k] for k in ("t_compute_s", "t_memory_s",
+                                       "t_collective_s",
+                                       "roofline_fraction")})
+    return schema.write_document(doc)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--md", default="results/roofline.md")
+    ap.add_argument("--bench-json", default=None, metavar="NAME",
+                    help="also write BENCH_<NAME>.json with the analytic "
+                         "dominant-bound time per cell")
     args = ap.parse_args()
 
     rows, skips = [], []
@@ -133,6 +167,10 @@ def main():
     pathlib.Path(args.md).parent.mkdir(parents=True, exist_ok=True)
     pathlib.Path(args.md).write_text(md + "\n")
     print(md)
+
+    if args.bench_json:
+        out = write_bench_json(rows, args.bench_json)
+        print(f"\nwrote {out} ({len(rows)} analytic cells)")
 
     # dominant-term census + worst cells (hillclimb candidates)
     from collections import Counter

@@ -1,180 +1,47 @@
-"""Benchmark harness — one function per paper table/figure.
+"""Benchmark harness front-end — paper-table CSV over ``repro.bench``.
 
-Prints ``name,us_per_call,derived`` CSV rows (derived = the table's natural
-unit, e.g. records/s). Runs on ONE CPU device (multi-device dataflows are
-exercised via a (1,)-mesh shard_map so the collective code paths compile;
-the cross-middleware *byte-movement* comparison — the paper's real finding —
-is quantified from compiled HLO in EXPERIMENTS.md §Roofline, since this
-container has no real interconnect to time).
+Thin wrapper over the scenario registry (``repro/bench/registry.py``) and
+the shared timing protocol (``repro/bench/timing.py``): this file owns no
+timing loops — warmup / repeat / dispersion policy lives in exactly one
+place. Prints the historical ``name,us_per_call,derived`` CSV rows and
+writes a schema-stable ``BENCH_tables.json`` at the repo root (diff two
+runs with ``python -m repro.bench.compare``).
 
-Paper mapping:
+Paper mapping (scenario -> table/figure):
   Table 3  -> malgen_seed, malgen_generate, malgen_encode
-  Figure 3 -> malgen_scatter_payload (the head node's in-memory seed)
-  Table 4  -> malstone_a_{streams,sphere,mapreduce}
-  Table 5  -> malstone_b_{streams,sphere,mapreduce}
-  (kernels) -> pallas kernels vs jnp references (interpret mode)
+  Figure 3 -> malgen_seed's ``seed_bytes`` derived field (the head node's
+              in-memory scatter payload)
+  Table 4  -> malstone_a_{streams,sphere,mapreduce,...}_oneshot
+  Table 5  -> malstone_b_{streams,sphere,mapreduce,...}_oneshot
+  (scale)  -> malstone_b_*_streaming (same totals at bounded memory — the
+              log is never materialized; paper-scale record counts live in
+              repro.launch.malstone --stream-chunks and the B-10 dry-run)
+  (kernels)-> kernel_*_{pallas,jnp} (Pallas vs jnp reference, interpret
+              mode on CPU)
+
+Runs on forced host devices (default ``--nodes 2``) so the collective
+code paths compile; the cross-middleware *byte-movement* comparison — the
+paper's real finding — is quantified from compiled HLO in EXPERIMENTS.md
+§Roofline, since this container has no real interconnect to time.
+
+Usage: PYTHONPATH=src python benchmarks/run.py [--preset full]
+                                               [--scenario NAME ...]
 """
 
 from __future__ import annotations
 
-import time
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+# repro.bench (package init) is jax-free: the device-count flag must be
+# set before repro.bench.run's jax import
+from repro.bench import force_host_devices, preparse_nodes
 
-from repro.common.types import EventLog
-from repro.core import malstone_run, malstone_run_streaming
-from repro.core.spm import site_week_histogram
-from repro.malgen import (
-    MalGenConfig,
-    encode_records,
-    generate_shard,
-    generate_sharded_log,
-    make_seed,
-    make_seed_streaming,
-)
+force_host_devices(preparse_nodes())
 
-# bench scale (paper scale is exercised via the dry-run; CPU benches are
-# reduced but report per-record throughput, the paper's derived unit)
-N_RECORDS = 262_144
-N_SITES = 2_048
-CFG = MalGenConfig(num_sites=N_SITES, num_entities=16_384,
-                   marked_event_fraction=0.2)
-
-
-def timeit(fn, *args, warmup=2, iters=5):
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    dt = (time.perf_counter() - t0) / iters
-    return dt * 1e6, out  # us
-
-
-def row(name, us, derived):
-    print(f"{name},{us:.1f},{derived}", flush=True)
-
-
-# ------------------------------------------------------------------ Table 3
-def bench_malgen():
-    key = jax.random.key(0)
-
-    us, seed = timeit(lambda: make_seed(key, CFG, N_RECORDS), iters=3)
-    row("malgen_seed_phase1", us,
-        f"{CFG.num_entities / (us / 1e6):.3g}_entities_per_s")
-
-    gen = jax.jit(lambda: generate_shard(seed, CFG, 0, 8, N_RECORDS // 8))
-    us, log = timeit(gen, iters=3)
-    rps = (N_RECORDS // 8) / (us / 1e6)
-    row("malgen_generate_phase3", us, f"{rps:.4g}_records_per_s")
-
-    # Figure 3 analogue: phase-1 scatter payload (the memory the paper
-    # tracks — what must fit on the head node and cross the network)
-    row("malgen_scatter_payload", 0.0, f"{seed.seed_bytes}_bytes")
-
-    n = 16_384
-    sl = jax.tree.map(lambda x: x[:n], log)
-    t0 = time.perf_counter()
-    blob = encode_records(np.asarray(sl.event_seq), np.asarray(sl.shard_hash),
-                          np.asarray(sl.timestamp), np.asarray(sl.site_id),
-                          np.asarray(sl.entity_id), np.asarray(sl.mark))
-    dt = time.perf_counter() - t0
-    row("malgen_encode_100B_records", dt * 1e6,
-        f"{len(blob) / dt / 1e6:.4g}_MB_per_s")
-
-
-# -------------------------------------------------------------- Tables 4, 5
-def bench_malstone():
-    log, _ = generate_sharded_log(jax.random.key(1), CFG, 1, N_RECORDS)
-    mesh = jax.make_mesh((jax.device_count(),), ("data",))
-
-    for stat, table in (("A", "table4"), ("B", "table5")):
-        for backend in ("streams", "sphere", "mapreduce"):
-            fn = jax.jit(lambda l, b=backend, s=stat: malstone_run(
-                l, CFG.num_sites, mesh=mesh, statistic=s, backend=b,
-                capacity_factor=2.0).rho)
-            us, _ = timeit(fn, log, iters=3)
-            rps = N_RECORDS / (us / 1e6)
-            row(f"malstone_{stat.lower()}_{backend}_{table}", us,
-                f"{rps:.4g}_records_per_s")
-
-
-# ------------------------------------------------- streaming chunked engine
-def bench_malstone_streaming():
-    """8x the one-shot bench scale at bounded memory: the log is never
-    materialized — each scan step regenerates one 65,536-record chunk from
-    the seed and folds it into the histogram carry. Peak device footprint is
-    O(chunk + sites x weeks) (~3 MB here) vs ~50 MB of EventLog columns for
-    a materialized 2M-record log."""
-    total = 8 * N_RECORDS            # 2,097,152 records
-    chunk = 65_536
-    num_chunks = total // chunk      # 32
-    mesh = jax.make_mesh((jax.device_count(),), ("data",))
-
-    us, seed = timeit(
-        lambda: make_seed_streaming(jax.random.key(4), CFG, num_chunks,
-                                    chunk), iters=2, warmup=1)
-    row("malgen_seed_streaming", us, f"{total}_records_covered")
-
-    for backend in ("streams", "sphere", "mapreduce", "mapreduce_combiner"):
-        fn = jax.jit(lambda s, b=backend: malstone_run_streaming(
-            s, CFG.num_sites, mesh=mesh, statistic="B", backend=b,
-            chunk_records=chunk, cfg=CFG, num_chunks=num_chunks).rho)
-        us, _ = timeit(fn, seed, iters=2, warmup=1)
-        rps = total / (us / 1e6)
-        row(f"malstone_b_streaming_{backend}", us,
-            f"{rps:.4g}_records_per_s_at_{total}_records")
-
-
-# ------------------------------------------------------------------ kernels
-def bench_kernels():
-    from repro.kernels.segment_hist.ops import segment_hist
-    from repro.kernels.windowed_ratio.ops import windowed_ratio
-    from repro.kernels.powerlaw_sample.ops import powerlaw_sample
-    from repro.malgen import power_law_cdf, power_law_weights
-
-    rng = np.random.default_rng(0)
-    n, s = 65_536, 1024
-    site = jnp.asarray(rng.integers(0, s, n), jnp.int32)
-    week = jnp.asarray(rng.integers(0, 52, n), jnp.int32)
-    mark = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
-    valid = jnp.ones(n, jnp.int32)
-
-    ref = jax.jit(lambda: site_week_histogram(
-        EventLog(site, jnp.zeros(n, jnp.int32), week * 604800, mark), s))
-    us, _ = timeit(ref, iters=3)
-    row("segment_hist_jnp_ref", us, f"{n / (us / 1e6):.4g}_records_per_s")
-
-    ker = jax.jit(lambda: segment_hist(site, week, mark, valid,
-                                       num_sites=s, interpret=True))
-    us, _ = timeit(ker, iters=2)
-    row("segment_hist_pallas_interp", us,
-        f"{n / (us / 1e6):.4g}_records_per_s")
-
-    hist = np.stack([rng.integers(0, 50, (s, 52))] * 2, -1).astype(np.int32)
-    wr = jax.jit(lambda: windowed_ratio(jnp.asarray(hist), interpret=True))
-    us, _ = timeit(wr, iters=3)
-    row("windowed_ratio_pallas_interp", us, f"{s}_sites")
-
-    cdf = power_law_cdf(power_law_weights(N_SITES))
-    u = jax.random.uniform(jax.random.key(2), (16_384,))
-    ps = jax.jit(lambda: powerlaw_sample(u, cdf, interpret=True))
-    us, _ = timeit(ps, iters=2)
-    row("powerlaw_sample_pallas_interp", us,
-        f"{16_384 / (us / 1e6):.4g}_samples_per_s")
-
-
-def main() -> None:
-    print("name,us_per_call,derived")
-    bench_malgen()
-    bench_malstone()
-    bench_malstone_streaming()
-    bench_kernels()
-
+from repro.bench.run import main  # noqa: E402
 
 if __name__ == "__main__":
-    main()
+    argv = sys.argv[1:]
+    if not any(a.startswith("--preset") for a in argv):
+        argv = ["--preset", "full", "--name", "tables"] + argv
+    sys.exit(main(argv))

@@ -9,7 +9,6 @@ minutes on accelerators).
 """
 
 import argparse
-import dataclasses
 
 import jax
 

@@ -1,0 +1,51 @@
+"""repro.bench — the MalStone timing subsystem.
+
+Modules (import them directly; this package init stays import-free so
+``python -m repro.bench.run --nodes N`` can force host devices *before*
+jax initializes):
+
+- ``timing``   — the repo-wide timing protocol (warmup +
+  ``block_until_ready``, steady-state detection, median/min-of-k with
+  dispersion). Single source of truth for warmup/repeat policy.
+- ``registry`` — named scenarios: the full backend x statistic x engine
+  grid, kernel-path pairs (pallas vs jnp), MalGen phases, and scaling
+  sweeps over records-per-node and mesh size.
+- ``schema``   — the stable ``BENCH_<name>.json`` document format with
+  loader/validator (``load_document`` / ``validate_document``).
+- ``run``      — ``python -m repro.bench.run --preset smoke`` CLI.
+- ``compare``  — ``python -m repro.bench.compare a.json b.json
+  --tolerance 0.15``: diff two runs, exit nonzero on regression (the CI
+  perf gate).
+"""
+
+import os
+import sys
+
+
+def preparse_nodes(default: int = 2) -> int:
+    """Pull --nodes out of sys.argv before argparse (and before jax) runs.
+
+    Lives here (jax-free module) so every CLI front-end shares one parser
+    and can call ``force_host_devices`` before its first jax import.
+    """
+    for i, a in enumerate(sys.argv):
+        if a == "--nodes" and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith("--nodes="):
+            return int(a.split("=", 1)[1])
+    return default
+
+
+def force_host_devices(n: int) -> bool:
+    """Force ``n`` XLA host devices; must run before jax first imports.
+
+    Returns False (doing nothing) if jax is already imported or ``n <= 1``
+    — callers fall back to whatever devices exist.
+    """
+    if n <= 1 or "jax" in sys.modules:
+        return False
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n} "
+        + os.environ.get("XLA_FLAGS", ""))
+    return True
+

@@ -1,0 +1,374 @@
+"""Scenario registry: every timed unit in the repo, named and enumerable.
+
+The registry covers:
+
+- the **full MalStone grid** — backend {streams, sphere, mapreduce,
+  mapreduce_combiner} x statistic {A, B, B-fixed} x engine {one-shot,
+  streaming}: ``malstone_{a|b|bfixed}_{backend}_{oneshot|streaming}``;
+- the **kernel path pairs** — Pallas kernel (interpret mode on CPU) vs
+  its pure-jnp reference: ``kernel_{segment_hist,windowed_ratio,
+  powerlaw_sample}_{pallas,jnp}``;
+- the **MalGen phases** (paper Table 3): ``malgen_seed``,
+  ``malgen_generate``, ``malgen_encode``;
+- **scaling sweeps** — ``sweep_records_x{1,2,4}`` (records-per-node
+  multipliers over the preset base) and ``sweep_mesh_p{1,2,4}`` (mesh
+  size; skipped when the host exposes fewer devices).
+
+Each scenario is a named, individually runnable unit:
+``SCENARIOS[name].run(scale, ctx)`` times it under the shared protocol
+(``repro.bench.timing``) and returns a ``ScenarioResult`` ready for
+``repro.bench.schema.add_result``. A ``BenchContext`` caches generated
+logs/seeds so a sweep over 24 grid points generates data once per shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.timing import TimingResult, time_callable
+
+BACKENDS = ("streams", "sphere", "mapreduce", "mapreduce_combiner")
+STATISTICS = ("A", "B", "B-fixed")
+ENGINES = ("oneshot", "streaming")
+KERNELS = ("segment_hist", "windowed_ratio", "powerlaw_sample")
+KERNEL_PATHS = ("pallas", "jnp")
+
+_STAT_SLUG = {"A": "a", "B": "b", "B-fixed": "bfixed"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    """One preset's knob settings; every scenario builder takes one."""
+
+    records_per_node: int
+    num_sites: int
+    num_entities: int
+    chunk_records: int        # streaming-engine chunk size
+    warmup: int
+    iters: int
+    marked_event_fraction: float = 0.2
+
+    def as_params(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+PRESETS: Dict[str, Scale] = {
+    # CI / acceptance preset: small enough for shared runners, still
+    # compiles and runs every backend and both engines.
+    "smoke": Scale(records_per_node=8_192, num_sites=512,
+                   num_entities=4_096, chunk_records=2_048,
+                   warmup=1, iters=3),
+    # the historical benchmarks/run.py scale (paper-table CSV snapshot)
+    "full": Scale(records_per_node=262_144, num_sites=2_048,
+                  num_entities=16_384, chunk_records=65_536,
+                  warmup=2, iters=3),
+}
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    timing: TimingResult
+    records: Optional[int] = None
+    derived: Optional[dict] = None
+    # actual run parameters where they differ from the Scale defaults
+    # (sweeps override nodes / records_per_node); merged last into the
+    # emitted params so BENCH json provenance matches what actually ran
+    effective: Optional[dict] = None
+
+
+class BenchContext:
+    """Per-process cache of meshes, logs, and seeds keyed by shape."""
+
+    def __init__(self, nodes: Optional[int] = None):
+        self.nodes = nodes or jax.device_count()
+        if self.nodes > jax.device_count():
+            raise ValueError(
+                f"nodes={self.nodes} > visible devices ({jax.device_count()};"
+                " set --nodes before jax initializes)")
+        self._meshes: dict = {}
+        self._logs: dict = {}
+        self._seeds: dict = {}
+
+    def cfg(self, scale: Scale):
+        from repro.malgen import MalGenConfig
+        return MalGenConfig(
+            num_sites=scale.num_sites, num_entities=scale.num_entities,
+            marked_event_fraction=scale.marked_event_fraction)
+
+    def mesh(self, nodes: Optional[int] = None):
+        nodes = nodes or self.nodes
+        if nodes not in self._meshes:
+            self._meshes[nodes] = jax.make_mesh((nodes,), ("data",))
+        return self._meshes[nodes]
+
+    def log(self, scale: Scale, nodes: Optional[int] = None,
+            records_per_node: Optional[int] = None):
+        from repro.malgen import generate_sharded_log
+        nodes = nodes or self.nodes
+        rpn = records_per_node or scale.records_per_node
+        key = (nodes, rpn, scale.num_sites, scale.num_entities,
+               scale.marked_event_fraction)
+        if key not in self._logs:
+            log, _ = generate_sharded_log(
+                jax.random.key(1), self.cfg(scale), nodes, rpn)
+            jax.block_until_ready(log.site_id)
+            self._logs[key] = log
+        return self._logs[key]
+
+    def seed(self, scale: Scale, nodes: Optional[int] = None):
+        from repro.malgen import make_seed_streaming
+        nodes = nodes or self.nodes
+        num_chunks = nodes * max(
+            1, scale.records_per_node // scale.chunk_records)
+        key = (num_chunks, scale.chunk_records, scale.num_sites,
+               scale.num_entities, scale.marked_event_fraction)
+        if key not in self._seeds:
+            seed = make_seed_streaming(
+                jax.random.key(4), self.cfg(scale), num_chunks,
+                scale.chunk_records)
+            jax.block_until_ready(seed.entity_mark_time)
+            self._seeds[key] = (seed, num_chunks)
+        return self._seeds[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, individually runnable benchmark unit."""
+
+    name: str
+    group: str                # malstone | kernel | malgen | sweep
+    params: dict              # the grid point (static descriptors)
+    runner: Callable[[Scale, BenchContext], ScenarioResult]
+
+    def run(self, scale: Scale, ctx: BenchContext) -> ScenarioResult:
+        return self.runner(scale, ctx)
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def _register(name: str, group: str, params: dict):
+    def deco(fn):
+        if name in SCENARIOS:
+            raise ValueError(f"duplicate scenario {name!r}")
+        SCENARIOS[name] = Scenario(name=name, group=group, params=params,
+                                   runner=fn)
+        return fn
+    return deco
+
+
+# --------------------------------------------------------------- MalStone grid
+def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
+                  statistic: str, engine: str,
+                  nodes: Optional[int] = None,
+                  records_per_node: Optional[int] = None) -> ScenarioResult:
+    from repro.core import malstone_run, malstone_run_streaming
+    nodes = nodes or ctx.nodes
+    rpn = records_per_node or scale.records_per_node
+    mesh = ctx.mesh(nodes)
+    cfg = ctx.cfg(scale)
+    total = nodes * rpn
+
+    if engine == "oneshot":
+        log = ctx.log(scale, nodes, rpn)
+        fn = jax.jit(lambda l: malstone_run(
+            l, cfg.num_sites, mesh=mesh, statistic=statistic,
+            backend=backend, capacity_factor=2.0).rho)
+        timing, _ = time_callable(fn, log, warmup=scale.warmup,
+                                  iters=scale.iters)
+    elif engine == "streaming":
+        seed, num_chunks = ctx.seed(scale, nodes)
+        # capacity_factor = nodes keeps the per-chunk mapreduce shuffle
+        # lossless (see streaming.py's capacity caveat)
+        fn = jax.jit(lambda s: malstone_run_streaming(
+            s, cfg.num_sites, mesh=mesh, statistic=statistic,
+            backend=backend, chunk_records=scale.chunk_records, cfg=cfg,
+            num_chunks=num_chunks, capacity_factor=float(nodes)).rho)
+        timing, _ = time_callable(fn, seed, warmup=scale.warmup,
+                                  iters=scale.iters)
+        total = num_chunks * scale.chunk_records
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return ScenarioResult(timing=timing, records=total,
+                          effective={"nodes": nodes,
+                                     "records_per_node": rpn})
+
+
+for _stat in STATISTICS:
+    for _backend in BACKENDS:
+        for _engine in ENGINES:
+            _name = (f"malstone_{_STAT_SLUG[_stat]}_{_backend}_{_engine}")
+
+            @_register(_name, "malstone",
+                       {"backend": _backend, "statistic": _stat,
+                        "engine": _engine, "kernel_path": "jnp"})
+            def _scenario(scale, ctx, *, _b=_backend, _s=_stat, _e=_engine):
+                return _run_malstone(scale, ctx, backend=_b, statistic=_s,
+                                     engine=_e)
+
+
+# ------------------------------------------------------------- kernel paths
+def _kernel_inputs(scale: Scale, kernel: str):
+    rng = np.random.default_rng(0)
+    n = scale.records_per_node
+    s = scale.num_sites
+    if kernel == "segment_hist":
+        return (jnp.asarray(rng.integers(0, s, n), jnp.int32),
+                jnp.asarray(rng.integers(0, 52, n), jnp.int32),
+                jnp.asarray(rng.integers(0, 2, n), jnp.int32),
+                jnp.ones(n, jnp.int32))
+    if kernel == "windowed_ratio":
+        hist = np.stack([rng.integers(0, 50, (s, 52))] * 2, -1)
+        return (jnp.asarray(hist.astype(np.int32)),)
+    if kernel == "powerlaw_sample":
+        from repro.malgen import power_law_cdf, power_law_weights
+        cdf = power_law_cdf(power_law_weights(s))
+        u = jax.random.uniform(jax.random.key(2), (n,))
+        return u, cdf
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def _run_kernel(scale: Scale, ctx: BenchContext, *, kernel: str,
+                path: str) -> ScenarioResult:
+    from repro.kernels.powerlaw_sample.ops import powerlaw_sample
+    from repro.kernels.powerlaw_sample.ref import powerlaw_sample_ref
+    from repro.kernels.segment_hist.ops import segment_hist
+    from repro.kernels.segment_hist.ref import segment_hist_ref
+    from repro.kernels.windowed_ratio.ops import windowed_ratio
+    from repro.kernels.windowed_ratio.ref import windowed_ratio_ref
+
+    args = _kernel_inputs(scale, kernel)
+    interpret = jax.default_backend() != "tpu"
+    if kernel == "segment_hist":
+        work = scale.records_per_node
+        fn = (jax.jit(lambda *a: segment_hist(
+                  *a, num_sites=scale.num_sites, interpret=interpret))
+              if path == "pallas" else
+              jax.jit(lambda *a: segment_hist_ref(
+                  *a, num_sites=scale.num_sites, num_weeks=52)))
+    elif kernel == "windowed_ratio":
+        work = scale.num_sites
+        fn = (jax.jit(lambda h: windowed_ratio(h, interpret=interpret))
+              if path == "pallas" else jax.jit(windowed_ratio_ref))
+    else:  # powerlaw_sample
+        work = scale.records_per_node
+        fn = (jax.jit(lambda u, c: powerlaw_sample(
+                  u, c, interpret=interpret))
+              if path == "pallas" else jax.jit(powerlaw_sample_ref))
+    timing, _ = time_callable(fn, *args, warmup=scale.warmup,
+                              iters=scale.iters)
+    return ScenarioResult(timing=timing, records=work)
+
+
+for _kernel in KERNELS:
+    for _path in KERNEL_PATHS:
+        @_register(f"kernel_{_kernel}_{_path}", "kernel",
+                   {"kernel": _kernel, "kernel_path": _path})
+        def _scenario_k(scale, ctx, *, _k=_kernel, _p=_path):
+            return _run_kernel(scale, ctx, kernel=_k, path=_p)
+
+
+# ------------------------------------------------------------ MalGen phases
+@_register("malgen_seed", "malgen", {"phase": "seed"})
+def _malgen_seed(scale: Scale, ctx: BenchContext) -> ScenarioResult:
+    from repro.malgen import make_seed
+    cfg = ctx.cfg(scale)
+    timing, seed = time_callable(
+        lambda: make_seed(jax.random.key(0), cfg, scale.records_per_node),
+        warmup=scale.warmup, iters=scale.iters)
+    # phase 1's work unit is entities, not records — keep the derived
+    # unit honest instead of reporting an entities/s number as records/s
+    eps = scale.num_entities / (timing.us_per_call / 1e6)
+    return ScenarioResult(
+        timing=timing,
+        derived={"entities_per_s": round(eps, 1),
+                 "seed_bytes": int(seed.seed_bytes)})
+
+
+@_register("malgen_generate", "malgen", {"phase": "generate"})
+def _malgen_generate(scale: Scale, ctx: BenchContext) -> ScenarioResult:
+    from repro.malgen import generate_shard, make_seed
+    cfg = ctx.cfg(scale)
+    seed = make_seed(jax.random.key(0), cfg, scale.records_per_node)
+    shard_records = max(1, scale.records_per_node // 8)
+    fn = jax.jit(lambda: generate_shard(seed, cfg, 0, 8, shard_records))
+    timing, _ = time_callable(fn, warmup=scale.warmup, iters=scale.iters)
+    return ScenarioResult(timing=timing, records=shard_records)
+
+
+@_register("malgen_encode", "malgen", {"phase": "encode"})
+def _malgen_encode(scale: Scale, ctx: BenchContext) -> ScenarioResult:
+    from repro.malgen import encode_records
+    log = ctx.log(scale)
+    n = min(16_384, scale.records_per_node)
+    sl = jax.tree.map(lambda x: np.asarray(x[:n]), log)
+    timing, blob = time_callable(
+        lambda: encode_records(sl.event_seq, sl.shard_hash, sl.timestamp,
+                               sl.site_id, sl.entity_id, sl.mark),
+        warmup=1, iters=max(1, scale.iters - 1))
+    return ScenarioResult(timing=timing, records=n,
+                          derived={"blob_bytes": len(blob)})
+
+
+# ----------------------------------------------------------- scaling sweeps
+class ScenarioSkip(RuntimeError):
+    """Raised by a scenario that cannot run in this environment."""
+
+
+SWEEP_RECORD_MULTIPLIERS = (1, 2, 4)
+SWEEP_MESH_SIZES = (1, 2, 4)
+
+for _mult in SWEEP_RECORD_MULTIPLIERS:
+    @_register(f"sweep_records_x{_mult}", "sweep",
+               {"sweep": "records_per_node", "multiplier": _mult,
+                "backend": "sphere", "statistic": "B", "engine": "oneshot"})
+    def _sweep_records(scale, ctx, *, _m=_mult):
+        return _run_malstone(
+            scale, ctx, backend="sphere", statistic="B", engine="oneshot",
+            records_per_node=scale.records_per_node * _m)
+
+for _p in SWEEP_MESH_SIZES:
+    @_register(f"sweep_mesh_p{_p}", "sweep",
+               {"sweep": "mesh_size", "nodes": _p, "backend": "sphere",
+                "statistic": "B", "engine": "oneshot"})
+    def _sweep_mesh(scale, ctx, *, _p=_p):
+        if _p > jax.device_count():
+            raise ScenarioSkip(
+                f"needs {_p} devices, host exposes {jax.device_count()}")
+        return _run_malstone(scale, ctx, backend="sphere", statistic="B",
+                             engine="oneshot", nodes=_p)
+
+
+# ------------------------------------------------------------------ selection
+# Preset -> which scenarios run by default. ``smoke`` must cover all four
+# backends and both engines (acceptance criterion) but trims the statistic
+# axis to keep shared-runner wall clock bounded; ``full`` runs everything.
+def preset_scenario_names(preset: str) -> list:
+    if preset not in PRESETS:
+        raise ValueError(f"unknown preset {preset!r}; have {list(PRESETS)}")
+    names = []
+    for name, sc in SCENARIOS.items():
+        if preset == "smoke":
+            if sc.group == "malstone" and sc.params["statistic"] != "B":
+                # keep one non-B point per statistic so the finalize paths
+                # stay covered without tripling the grid
+                if not (sc.params["backend"] == "streams"
+                        and sc.params["engine"] == "oneshot"):
+                    continue
+            if sc.group == "sweep" and sc.params.get("multiplier") == 4:
+                continue
+        names.append(name)
+    return names
+
+
+def iter_scenarios(names: Optional[Iterable[str]] = None):
+    for name in (names if names is not None else SCENARIOS):
+        if name not in SCENARIOS:
+            raise KeyError(
+                f"unknown scenario {name!r}; run with --list to enumerate")
+        yield SCENARIOS[name]

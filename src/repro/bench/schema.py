@@ -1,0 +1,213 @@
+"""The stable ``BENCH_<name>.json`` result schema: writer, loader, validator.
+
+Every producer (``repro.bench.run``, ``benchmarks/run.py``,
+``repro.launch.malstone --bench-json``, ``benchmarks/roofline.py
+--bench-json``) emits the same document shape so ``repro.bench.compare``
+can diff any two runs:
+
+    {
+      "schema_version": 1,
+      "name": "smoke",                  # -> BENCH_smoke.json at the repo root
+      "created_unix": 1700000000.0,
+      "git_sha": "abc123... | unknown",
+      "jax_version": "0.4.37",
+      "platform": "cpu",
+      "device_count": 2,
+      "preset": "smoke",                # optional: which preset produced it
+      "env": {...},                     # optional free-form environment notes
+      "results": [
+        {
+          "scenario": "malstone_b_sphere_oneshot",   # stable unit name
+          "params": {"backend": "sphere", ...},      # scenario grid point
+          "us_per_call": 1234.5,                     # median, TimingResult
+          "us_min": ..., "us_mean": ..., "us_std": ...,
+          "rel_dispersion": ..., "samples_us": [...],
+          "warmup_iters": 2, "iters": 5, "steady": true,
+          "records": 524288,                         # optional work size
+          "records_per_s": 4.2e8,                    # paper's derived unit
+          "derived": {...}                           # optional extras
+        }, ...
+      ]
+    }
+
+The validator is hand-rolled (no jsonschema dependency in the container)
+and is the contract the compare CLI and CI gate rely on: a document that
+round-trips through ``write_document`` -> ``load_document`` is guaranteed
+schema-valid.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import time
+from typing import Optional
+
+import jax
+
+from repro.bench.timing import TimingResult
+
+SCHEMA_VERSION = 1
+
+_REQUIRED_TOP = {
+    "schema_version": int,
+    "name": str,
+    "created_unix": (int, float),
+    "git_sha": str,
+    "jax_version": str,
+    "platform": str,
+    "device_count": int,
+    "results": list,
+}
+
+_REQUIRED_RESULT = {
+    "scenario": str,
+    "params": dict,
+    "us_per_call": (int, float),
+    "us_min": (int, float),
+    "us_mean": (int, float),
+    "us_std": (int, float),
+    "rel_dispersion": (int, float),
+    "samples_us": list,
+    "warmup_iters": int,
+    "iters": int,
+    "steady": bool,
+}
+
+
+class BenchSchemaError(ValueError):
+    """A document does not conform to the BENCH_*.json schema."""
+
+
+def repo_root() -> pathlib.Path:
+    """The repo root (where BENCH_*.json files land): src/repro/bench/ -> /."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def bench_path(name: str, root: Optional[pathlib.Path] = None) -> pathlib.Path:
+    return (root or repo_root()) / f"BENCH_{name}.json"
+
+
+def git_sha(root: Optional[pathlib.Path] = None) -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root or repo_root(),
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def new_document(name: str, *, preset: Optional[str] = None,
+                 env: Optional[dict] = None) -> dict:
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "name": name,
+        "created_unix": time.time(),
+        "git_sha": git_sha(),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "results": [],
+    }
+    if preset is not None:
+        doc["preset"] = preset
+    if env:
+        doc["env"] = env
+    return doc
+
+
+def add_result(doc: dict, scenario: str, params: dict, timing: TimingResult,
+               *, records: Optional[int] = None,
+               derived: Optional[dict] = None) -> dict:
+    """Append one scenario result (returns the entry for convenience)."""
+    entry = {"scenario": scenario, "params": dict(params)}
+    entry.update(timing.as_dict())
+    if records is not None:
+        entry["records"] = int(records)
+        if timing.us_per_call > 0:
+            entry["records_per_s"] = records / (timing.us_per_call / 1e6)
+    if derived:
+        entry["derived"] = dict(derived)
+    doc["results"].append(entry)
+    return entry
+
+
+def _check_fields(obj: dict, spec: dict, where: str) -> None:
+    for key, typ in spec.items():
+        if key not in obj:
+            raise BenchSchemaError(f"{where}: missing required key {key!r}")
+        if not isinstance(obj[key], typ):
+            raise BenchSchemaError(
+                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
+                f"expected {typ}")
+        allowed = typ if isinstance(typ, tuple) else (typ,)
+        if bool not in allowed and isinstance(obj[key], bool):
+            raise BenchSchemaError(f"{where}: key {key!r} is bool")
+
+
+def validate_document(doc: dict) -> None:
+    """Raise BenchSchemaError unless ``doc`` conforms to the schema."""
+    if not isinstance(doc, dict):
+        raise BenchSchemaError(f"document is {type(doc).__name__}, not dict")
+    _check_fields(doc, _REQUIRED_TOP, "document")
+    if doc["schema_version"] != SCHEMA_VERSION:
+        raise BenchSchemaError(
+            f"schema_version {doc['schema_version']} != {SCHEMA_VERSION}")
+    if doc["device_count"] < 1:
+        raise BenchSchemaError("device_count must be >= 1")
+    seen = set()
+    for i, res in enumerate(doc["results"]):
+        where = f"results[{i}]"
+        if not isinstance(res, dict):
+            raise BenchSchemaError(f"{where} is not a dict")
+        _check_fields(res, _REQUIRED_RESULT, where)
+        name = res["scenario"]
+        if name in seen:
+            raise BenchSchemaError(f"{where}: duplicate scenario {name!r}")
+        seen.add(name)
+        if res["us_per_call"] < 0:
+            raise BenchSchemaError(f"{where}: negative us_per_call")
+        if res["iters"] < 1:
+            raise BenchSchemaError(f"{where}: iters must be >= 1")
+        if len(res["samples_us"]) != res["iters"]:
+            raise BenchSchemaError(
+                f"{where}: len(samples_us)={len(res['samples_us'])} != "
+                f"iters={res['iters']}")
+        if not all(isinstance(s, (int, float)) and not isinstance(s, bool)
+                   and s >= 0 for s in res["samples_us"]):
+            raise BenchSchemaError(f"{where}: samples_us must be >= 0 numbers")
+        for opt, typ in (("records", int), ("records_per_s", (int, float)),
+                         ("derived", dict)):
+            if opt in res and (not isinstance(res[opt], typ)
+                               or isinstance(res[opt], bool)):
+                raise BenchSchemaError(f"{where}: {opt} has wrong type")
+
+
+def write_document(doc: dict,
+                   path: Optional[pathlib.Path] = None) -> pathlib.Path:
+    """Validate and write; default path is BENCH_<name>.json at repo root."""
+    validate_document(doc)
+    path = pathlib.Path(path) if path else bench_path(doc["name"])
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=False) + "\n")
+    return path
+
+
+def load_document(path) -> dict:
+    """Load and validate a BENCH_*.json document."""
+    p = pathlib.Path(path)
+    try:
+        doc = json.loads(p.read_text())
+    except FileNotFoundError:
+        raise BenchSchemaError(f"no such bench file: {p}")
+    except json.JSONDecodeError as e:
+        raise BenchSchemaError(f"{p} is not valid JSON: {e}")
+    validate_document(doc)
+    return doc
+
+
+def results_by_scenario(doc: dict) -> dict:
+    return {r["scenario"]: r for r in doc["results"]}

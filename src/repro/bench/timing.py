@@ -1,0 +1,122 @@
+"""Single source of truth for the repo's timing protocol.
+
+Every wall-clock number this repo reports (benchmarks/run.py rows, the
+``repro.bench.run`` scenario sweeps, ``repro.launch.malstone --bench-json``)
+comes through :func:`time_callable`, so warmup / repeat / dispersion policy
+is defined exactly once:
+
+- **warmup + block_until_ready**: jit'd callables are dispatched
+  asynchronously; every sample (warmup included) is fenced with
+  ``jax.block_until_ready`` so compile time and in-flight dispatch never
+  leak into a measurement.
+- **steady-state detection**: after the mandatory warmup floor, extra
+  warmup calls run until two consecutive timings agree within
+  ``steady_rtol`` (or ``max_warmup`` is hit). The returned ``steady`` flag
+  records whether the callable settled — CI smoke runs on shared runners
+  routinely report ``steady=false``, which is why the regression gate uses
+  a loose tolerance there.
+- **median / min-of-k with dispersion**: each measured iteration is timed
+  individually. The headline number (``us_per_call``) is the *median* —
+  robust to one preempted sample; ``us_min`` is the classic min-of-k
+  "speed-of-light" estimate; ``rel_dispersion`` (IQR / median) quantifies
+  how much to trust the run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingResult:
+    """One timed callable, per the protocol in the module docstring."""
+
+    us_per_call: float        # median over the measured iterations
+    us_min: float
+    us_mean: float
+    us_std: float             # population std (0.0 when iters == 1)
+    rel_dispersion: float     # IQR / median (0.0 when iters < 4)
+    samples_us: Tuple[float, ...]
+    warmup_iters: int         # warmup calls actually executed
+    iters: int
+    steady: bool              # consecutive warmup timings agreed
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["samples_us"] = list(self.samples_us)
+        return d
+
+
+def _quartile_spread(samples: Sequence[float]) -> float:
+    if len(samples) < 4:
+        return 0.0
+    q = statistics.quantiles(samples, n=4)
+    med = statistics.median(samples)
+    return (q[2] - q[0]) / med if med > 0 else 0.0
+
+
+def _timed_call(fn: Callable, args: tuple) -> Tuple[float, Any]:
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0, out
+
+
+def time_callable(fn: Callable, *args,
+                  warmup: int = 2,
+                  iters: int = 5,
+                  steady_rtol: float = 0.25,
+                  max_warmup: int = 8,
+                  on_sample: Optional[Callable[[int, float], None]] = None,
+                  ) -> Tuple[TimingResult, Any]:
+    """Time ``fn(*args)`` per the repo protocol; return (TimingResult, out).
+
+    ``warmup`` is the floor (>= 1 call always runs so jit compilation never
+    lands in a sample); warmup continues past the floor until two
+    consecutive timings agree within ``steady_rtol`` or ``max_warmup``
+    total warmup calls have run (``max_warmup <= warmup`` disables the
+    adaptive probing for expensive callables). ``on_sample(i, us)`` fires
+    after each measured iteration — live progress for minutes-long runs.
+    ``out`` is the last call's result so callers can derive scenario
+    outputs without re-running.
+    """
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    floor = max(1, warmup)
+    prev, out = _timed_call(fn, args)
+    ran = 1
+    steady = False
+    # steady-state detection needs a second call; max_warmup <= 1 opts out
+    # (expensive launcher runs: exactly one warmup, steady reported False)
+    while ran < floor or (not steady and ran < max_warmup):
+        dt, out = _timed_call(fn, args)
+        ran += 1
+        lo = min(prev, dt)
+        steady = lo > 0 and abs(dt - prev) / lo <= steady_rtol
+        prev = dt
+        if ran >= floor and steady:
+            break
+
+    samples = []
+    for i in range(iters):
+        dt, out = _timed_call(fn, args)
+        samples.append(dt * 1e6)
+        if on_sample is not None:
+            on_sample(i, dt * 1e6)
+
+    return TimingResult(
+        us_per_call=statistics.median(samples),
+        us_min=min(samples),
+        us_mean=statistics.fmean(samples),
+        us_std=statistics.pstdev(samples) if len(samples) > 1 else 0.0,
+        rel_dispersion=_quartile_spread(samples),
+        samples_us=tuple(samples),
+        warmup_iters=ran,
+        iters=iters,
+        steady=steady,
+    ), out

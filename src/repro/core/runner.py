@@ -9,7 +9,6 @@ same statistic, only the dataflow differs).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

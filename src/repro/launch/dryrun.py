@@ -26,19 +26,17 @@ Usage:
 import argparse
 import json
 import pathlib
-import re
 import sys
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ALIASES, all_arch_ids, get_config
+from repro.configs import ALIASES, get_config
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models import steps as S
-from repro.models.sharding import param_shardings, sharding_ctx, spec_for
+from repro.models.sharding import param_shardings, sharding_ctx
 from repro.models.steps import SHAPES, input_specs, shape_applicable
 from repro.optim import AdamWConfig
 
@@ -100,7 +98,6 @@ def build_lowerable(cfg, shape_name: str, mesh, baxes=None):
     """Returns (fn, example_args, in_shardings) for the cell's step."""
     sh = SHAPES[shape_name]
     ispec = input_specs(cfg, shape_name)
-    import functools as _ft
     global batch_shardings
     if baxes:
         _orig = batch_shardings

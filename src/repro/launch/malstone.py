@@ -33,11 +33,13 @@ if _N > 1:
         f"--xla_force_host_platform_device_count={_N} "
         + os.environ.get("XLA_FLAGS", ""))
 
+import pathlib
 import time
 
 import jax
-import numpy as np
 
+from repro.bench import schema
+from repro.bench.timing import time_callable
 from repro.core import malstone_run, malstone_run_streaming
 from repro.malgen import MalGenConfig, generate_sharded_log, make_seed_streaming
 
@@ -56,6 +58,10 @@ def main():
     ap.add_argument("--stream-chunks", type=int, default=0, metavar="N",
                     help="stream each node's records in N regenerated chunks"
                          " (0 = one-shot materialized log)")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="also write this run as a BENCH_*.json document "
+                         "(schema: repro/bench/schema.py) for "
+                         "repro.bench.compare")
     args = ap.parse_args()
 
     mesh = jax.make_mesh((args.nodes,), ("data",))
@@ -100,18 +106,36 @@ def main():
             backend=args.backend).rho)
         run_args = (log,)
 
-    fn(*run_args).block_until_ready()
-    times = []
-    for r in range(args.runs):
-        t0 = time.perf_counter()
-        rho = fn(*run_args)
-        rho.block_until_ready()
-        times.append(time.perf_counter() - t0)
-        print(f"  run {r + 1}: {times[-1] * 1e3:.1f} ms "
-              f"({total / times[-1] / 1e6:.1f}M records/s)")
+    # shared timing protocol (repro.bench.timing), with exactly ONE warmup
+    # execution (max_warmup=1 opts out of steady-state probing): launcher
+    # runs can be minutes each, so the adaptive warmup loop is not worth
+    # up-to-8 extra executions here
+    timing, _ = time_callable(
+        fn, *run_args, warmup=1, iters=args.runs, max_warmup=1,
+        on_sample=lambda r, us: print(
+            f"  run {r + 1}: {us / 1e3:.1f} ms "
+            f"({total / (us / 1e6) / 1e6:.1f}M records/s)", flush=True))
     mode = f"stream x{args.stream_chunks}" if args.stream_chunks else "one-shot"
     print(f"MalStone {args.statistic} [{args.backend}, {mode}] "
-          f"avg {np.mean(times) * 1e3:.1f} ms")
+          f"median {timing.us_per_call / 1e3:.1f} ms over {args.runs} runs")
+
+    if args.bench_json:
+        engine = "streaming" if args.stream_chunks else "oneshot"
+        stat_slug = args.statistic.lower().replace("-", "")
+        scenario = f"launch_malstone_{stat_slug}_{args.backend}_{engine}"
+        doc = schema.new_document(
+            pathlib.Path(args.bench_json).stem.removeprefix("BENCH_"),
+            env={"source": "repro.launch.malstone"})
+        schema.add_result(
+            doc, scenario,
+            {"backend": args.backend, "statistic": args.statistic,
+             "engine": engine, "nodes": args.nodes,
+             "records_per_node": args.records_per_node,
+             "sites": args.sites, "entities": args.entities,
+             "stream_chunks": args.stream_chunks},
+            timing, records=total)
+        out = schema.write_document(doc, path=args.bench_json)
+        print(f"wrote {out}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,5 @@ def batch_axes(mesh) -> tuple:
 
 def make_host_mesh(n: int = 8, axes=("data",)):
     """Small host-device mesh for functional multi-device tests."""
-    import numpy as np
     shape = [n] if len(axes) == 1 else None
     return jax.make_mesh(tuple(shape or ()), axes)

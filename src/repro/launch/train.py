@@ -12,7 +12,6 @@ runtime (checkpoint/restart + SPM node doctor).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

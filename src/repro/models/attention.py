@@ -16,7 +16,6 @@ feasible).
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

@@ -16,7 +16,6 @@ positions [0, L] inclusive.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

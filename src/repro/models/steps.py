@@ -9,7 +9,6 @@ correct, shardable, zero device allocation (the dry-run pattern).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -20,7 +20,7 @@ RGLRUState / RWKV6State + channel-mix shifts), stacked like the params.
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -9,7 +9,6 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS_EXTRA", ""))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.common.types import WEEKS_PER_YEAR

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests (deliverable f): reduced same-family config,
 one forward + one full train step on CPU; asserts shapes and no NaNs."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -11,13 +11,12 @@ import pathlib
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.common.types import EventLog, SECONDS_PER_YEAR
-from repro.core import malstone_single_device, site_week_histogram
+from repro.common.types import EventLog
+from repro.core import site_week_histogram
 from repro.core.backends.mapreduce import _pack_buckets
 
 HERE = pathlib.Path(__file__).parent

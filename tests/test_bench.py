@@ -1,0 +1,207 @@
+"""Tests for the repro.bench timing subsystem.
+
+- timing protocol: sample accounting, median/min ordering, steady flag;
+- schema: write -> load -> validate round-trip, validator rejections;
+- compare CLI: the documented exit-code contract (0 ok / 1 regression /
+  2 missing-or-invalid), via main(argv) — no subprocess;
+- registry: the full backend x statistic x engine grid is present, and
+  every combination is callable end-to-end at tiny scale.
+"""
+
+import json
+
+import pytest
+
+from repro.bench import compare as compare_mod
+from repro.bench import registry, schema
+from repro.bench.timing import TimingResult, time_callable
+
+TINY = registry.Scale(records_per_node=512, num_sites=64, num_entities=256,
+                      chunk_records=256, warmup=1, iters=1)
+
+
+# ------------------------------------------------------------------- timing
+class TestTimingProtocol:
+    def test_sample_accounting(self):
+        calls = []
+        timing, out = time_callable(lambda: calls.append(0) or 7,
+                                    warmup=2, iters=4)
+        assert out == 7
+        assert timing.iters == 4 and len(timing.samples_us) == 4
+        # warmup floor respected; steady loop may add more
+        assert 2 <= timing.warmup_iters <= 8
+        assert len(calls) == timing.warmup_iters + timing.iters
+        assert timing.us_min <= timing.us_per_call <= max(timing.samples_us)
+        assert timing.us_min > 0
+
+    def test_iters_validation(self):
+        with pytest.raises(ValueError):
+            time_callable(lambda: 1, iters=0)
+
+    def test_as_dict_round_trips_samples(self):
+        timing, _ = time_callable(lambda: 1, warmup=1, iters=2)
+        d = timing.as_dict()
+        assert isinstance(d["samples_us"], list)
+        assert d["iters"] == 2 and isinstance(d["steady"], bool)
+
+
+def _fake_timing(us: float) -> TimingResult:
+    return TimingResult(us_per_call=us, us_min=us * 0.9, us_mean=us,
+                        us_std=0.0, rel_dispersion=0.0,
+                        samples_us=(us,), warmup_iters=1, iters=1,
+                        steady=True)
+
+
+def _fake_doc(name="unit", scenarios=("s1", "s2"), us=100.0):
+    doc = schema.new_document(name)
+    for s in scenarios:
+        schema.add_result(doc, s, {"backend": "streams"}, _fake_timing(us),
+                          records=1000)
+    return doc
+
+
+# ------------------------------------------------------------------- schema
+class TestSchema:
+    def test_round_trip(self, tmp_path):
+        doc = _fake_doc()
+        path = tmp_path / "BENCH_unit.json"
+        schema.write_document(doc, path=path)
+        loaded = schema.load_document(path)
+        assert loaded == json.loads(json.dumps(doc))  # tuple/list-normalized
+        schema.validate_document(loaded)  # idempotent
+
+    def test_derived_units(self):
+        doc = _fake_doc(us=1e6)  # 1 s/call, 1000 records
+        assert doc["results"][0]["records_per_s"] == pytest.approx(1000.0)
+
+    @pytest.mark.parametrize("mutate, msg", [
+        (lambda d: d.pop("git_sha"), "missing required key"),
+        (lambda d: d.__setitem__("schema_version", 99), "schema_version"),
+        (lambda d: d.__setitem__("device_count", 0), "device_count"),
+        (lambda d: d["results"][0].pop("us_per_call"), "missing required"),
+        (lambda d: d["results"][0].__setitem__("iters", 3), "samples_us"),
+        (lambda d: d["results"].append(dict(d["results"][0])), "duplicate"),
+        (lambda d: d["results"][0].__setitem__("us_per_call", -1.0),
+         "negative"),
+    ])
+    def test_validator_rejects(self, mutate, msg):
+        doc = json.loads(json.dumps(_fake_doc()))
+        mutate(doc)
+        with pytest.raises(schema.BenchSchemaError, match=msg):
+            schema.validate_document(doc)
+
+    def test_load_rejects_garbage(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text("{not json")
+        with pytest.raises(schema.BenchSchemaError):
+            schema.load_document(p)
+        with pytest.raises(schema.BenchSchemaError):
+            schema.load_document(tmp_path / "absent.json")
+
+
+# ------------------------------------------------------------------ compare
+class TestCompareCLI:
+    """Exit-code contract: 0 ok / 1 regression / 2 missing or invalid."""
+
+    def _write(self, tmp_path, name, **kw):
+        path = tmp_path / f"{name}.json"
+        schema.write_document(_fake_doc(name=name, **kw), path=path)
+        return str(path)
+
+    def test_identical_ok(self, tmp_path):
+        base = self._write(tmp_path, "base", us=100.0)
+        assert compare_mod.main([base, base, "--tolerance", "0.15"]) == 0
+
+    def test_regression_exits_1(self, tmp_path):
+        base = self._write(tmp_path, "base", us=100.0)
+        cur = self._write(tmp_path, "cur", us=200.0)  # 2x slower
+        assert compare_mod.main([base, cur, "--tolerance", "0.15"]) == 1
+
+    def test_improvement_exits_0(self, tmp_path):
+        base = self._write(tmp_path, "base", us=200.0)
+        cur = self._write(tmp_path, "cur", us=100.0)
+        assert compare_mod.main([base, cur, "--tolerance", "0.15"]) == 0
+
+    def test_within_tolerance_ok(self, tmp_path):
+        base = self._write(tmp_path, "base", us=100.0)
+        cur = self._write(tmp_path, "cur", us=110.0)
+        assert compare_mod.main([base, cur, "--tolerance", "0.15"]) == 0
+        assert compare_mod.main([base, cur, "--tolerance", "0.05"]) == 1
+
+    def test_missing_scenario_exits_2(self, tmp_path):
+        base = self._write(tmp_path, "base", scenarios=("s1", "s2", "s3"))
+        cur = self._write(tmp_path, "cur", scenarios=("s1", "s2"))
+        assert compare_mod.main([base, cur]) == 2
+        assert compare_mod.main([base, cur, "--allow-missing"]) == 0
+        # new scenarios in current are never fatal
+        assert compare_mod.main([cur, base]) == 0
+
+    def test_invalid_document_exits_2(self, tmp_path):
+        base = self._write(tmp_path, "base")
+        bad = tmp_path / "bad.json"
+        bad.write_text("{}")
+        assert compare_mod.main([base, str(bad)]) == 2
+
+    def test_report_structure(self):
+        a, b = _fake_doc(us=100.0), _fake_doc(us=300.0)
+        rep = compare_mod.compare_documents(a, b, tolerance=0.15)
+        assert rep["status"] == "regression"
+        assert all(r["ratio"] == pytest.approx(3.0) for r in rep["rows"])
+        text = compare_mod.format_report(rep)
+        assert "REGRESSION" in text
+
+
+# ----------------------------------------------------------------- registry
+@pytest.fixture(scope="module")
+def tiny_ctx():
+    """Shared context so the 8 grid cases reuse one generated log/seed."""
+    return registry.BenchContext(nodes=1)
+
+
+class TestRegistry:
+    def test_full_grid_present(self):
+        for stat in registry.STATISTICS:
+            for backend in registry.BACKENDS:
+                for engine in registry.ENGINES:
+                    name = (f"malstone_{registry._STAT_SLUG[stat]}_"
+                            f"{backend}_{engine}")
+                    assert name in registry.SCENARIOS, name
+                    params = registry.SCENARIOS[name].params
+                    assert params["backend"] == backend
+                    assert params["statistic"] == stat
+                    assert params["engine"] == engine
+
+    def test_kernel_and_sweep_scenarios_present(self):
+        for kernel in registry.KERNELS:
+            for path in registry.KERNEL_PATHS:
+                assert f"kernel_{kernel}_{path}" in registry.SCENARIOS
+        assert "sweep_records_x2" in registry.SCENARIOS
+        assert "sweep_mesh_p2" in registry.SCENARIOS
+        assert {"malgen_seed", "malgen_generate",
+                "malgen_encode"} <= set(registry.SCENARIOS)
+
+    def test_smoke_preset_covers_backends_and_engines(self):
+        names = registry.preset_scenario_names("smoke")
+        for backend in registry.BACKENDS:
+            for engine in registry.ENGINES:
+                assert f"malstone_b_{backend}_{engine}" in names
+
+    def test_unknown_preset_and_scenario_raise(self):
+        with pytest.raises(ValueError):
+            registry.preset_scenario_names("nope")
+        with pytest.raises(KeyError):
+            list(registry.iter_scenarios(["nope"]))
+
+    @pytest.mark.parametrize("backend", registry.BACKENDS)
+    @pytest.mark.parametrize("engine", registry.ENGINES)
+    def test_grid_callable_at_tiny_scale(self, backend, engine, tiny_ctx):
+        """Every backend x statistic x engine combination runs end-to-end."""
+        ctx = tiny_ctx
+        for stat in registry.STATISTICS:
+            name = (f"malstone_{registry._STAT_SLUG[stat]}_"
+                    f"{backend}_{engine}")
+            res = registry.SCENARIOS[name].run(TINY, ctx)
+            assert res.timing.us_per_call > 0
+            # with nodes=1, both engines cover exactly records_per_node
+            # (streaming: num_chunks * chunk_records == records_per_node)
+            assert res.records == TINY.records_per_node

@@ -55,7 +55,6 @@ class TestShardingRules:
     def test_divisibility_fallback(self):
         from jax.sharding import PartitionSpec as P
         from repro.models.sharding import spec_for
-        import os
         mesh = jax.make_mesh((1,), ("data",))
         # dim 7 not divisible by data=1? divisible; use rules with data
         spec = spec_for((8, 7), ("embed", None), {"embed": "data"}, mesh)

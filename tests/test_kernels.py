@@ -12,7 +12,6 @@ from repro.kernels.windowed_ratio.ops import windowed_ratio
 from repro.kernels.windowed_ratio.ref import windowed_ratio_ref
 from repro.kernels.powerlaw_sample.ops import powerlaw_sample
 from repro.kernels.powerlaw_sample.ref import powerlaw_sample_ref
-from repro.common.types import EventLog
 
 
 # --------------------------------------------------------------------------

@@ -1,14 +1,11 @@
 """MalGen tests: statistical properties, 3-phase consistency, record codec."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.common.types import (
     NEVER_MARKED,
-    SECONDS_PER_WEEK,
     SECONDS_PER_YEAR,
 )
 from repro.malgen import (

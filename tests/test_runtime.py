@@ -1,12 +1,10 @@
 """Fault-tolerant trainer: restart-from-checkpoint, retry, bad-node
 attribution via the paper's SPM statistic, deterministic data."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import DataConfig, TokenPipeline
 from repro.runtime import TrainConfig, Trainer

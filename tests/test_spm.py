@@ -1,9 +1,7 @@
 """Unit + property tests for the SPM statistic (paper Sections 3-4)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.common.types import (
