@@ -8,6 +8,11 @@ The registry covers:
 - the **kernel path pairs** — Pallas kernel (interpret mode on CPU) vs
   its pure-jnp reference: ``kernel_{segment_hist,windowed_ratio,
   powerlaw_sample}_{pallas,jnp}``;
+- the **lossless shuffle sweep** — MalStone B over the ``mapreduce``
+  backend at capacity factors {0.25, 0.5, 1.0, 2.0} plus one streaming
+  point: ``mapreduce_lossless_cf{0p25,0p5,1,2}`` /
+  ``mapreduce_lossless_streaming_cf0p5``, each recording the executed
+  shuffle round count in its ``derived`` extras;
 - the **MalGen phases** (paper Table 3): ``malgen_seed``,
   ``malgen_generate``, ``malgen_encode``;
 - **scaling sweeps** — ``sweep_records_x{1,2,4}`` (records-per-node
@@ -166,7 +171,15 @@ def _register(name: str, group: str, params: dict):
 def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
                   statistic: str, engine: str,
                   nodes: Optional[int] = None,
-                  records_per_node: Optional[int] = None) -> ScenarioResult:
+                  records_per_node: Optional[int] = None,
+                  capacity_factor: float = 2.0,
+                  collect_shuffle_stats: bool = False) -> ScenarioResult:
+    """One timed grid point. With ``collect_shuffle_stats`` the jitted fn
+    returns (rho, ShuffleStats) so ``time_callable``'s output carries the
+    shuffle accounting into ``derived`` — used by the lossless sweep.
+    The per-chunk mapreduce shuffle is lossless at any capacity factor
+    (multi-round residual exchange), so the streaming grid uses the same
+    default factor as the one-shot grid."""
     from repro.core import malstone_run, malstone_run_streaming
     nodes = nodes or ctx.nodes
     rpn = records_per_node or scale.records_per_node
@@ -174,27 +187,38 @@ def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
     cfg = ctx.cfg(scale)
     total = nodes * rpn
 
+    def shape_out(out):
+        return (out[0].rho, out[1]) if collect_shuffle_stats else out.rho
+
     if engine == "oneshot":
-        log = ctx.log(scale, nodes, rpn)
-        fn = jax.jit(lambda l: malstone_run(
+        args = (ctx.log(scale, nodes, rpn),)
+        fn = jax.jit(lambda l: shape_out(malstone_run(
             l, cfg.num_sites, mesh=mesh, statistic=statistic,
-            backend=backend, capacity_factor=2.0).rho)
-        timing, _ = time_callable(fn, log, warmup=scale.warmup,
-                                  iters=scale.iters)
+            backend=backend, capacity_factor=capacity_factor,
+            return_shuffle_stats=collect_shuffle_stats)))
     elif engine == "streaming":
         seed, num_chunks = ctx.seed(scale, nodes)
-        # capacity_factor = nodes keeps the per-chunk mapreduce shuffle
-        # lossless (see streaming.py's capacity caveat)
-        fn = jax.jit(lambda s: malstone_run_streaming(
+        args = (seed,)
+        fn = jax.jit(lambda s: shape_out(malstone_run_streaming(
             s, cfg.num_sites, mesh=mesh, statistic=statistic,
             backend=backend, chunk_records=scale.chunk_records, cfg=cfg,
-            num_chunks=num_chunks, capacity_factor=float(nodes)).rho)
-        timing, _ = time_callable(fn, seed, warmup=scale.warmup,
-                                  iters=scale.iters)
+            num_chunks=num_chunks, capacity_factor=capacity_factor,
+            return_shuffle_stats=collect_shuffle_stats)))
         total = num_chunks * scale.chunk_records
     else:
         raise ValueError(f"unknown engine {engine!r}")
-    return ScenarioResult(timing=timing, records=total,
+
+    timing, out = time_callable(fn, *args, warmup=scale.warmup,
+                                iters=scale.iters)
+    derived = None
+    if collect_shuffle_stats:
+        stats = out[1]
+        derived = {"capacity_factor": capacity_factor,
+                   "shuffle_rounds": int(stats.rounds),
+                   "shuffle_capacity": int(stats.capacity),
+                   "shuffle_deferred": int(stats.residual),
+                   "shuffle_overflow": int(stats.overflow)}
+    return ScenarioResult(timing=timing, records=total, derived=derived,
                           effective={"nodes": nodes,
                                      "records_per_node": rpn})
 
@@ -210,6 +234,54 @@ for _stat in STATISTICS:
             def _scenario(scale, ctx, *, _b=_backend, _s=_stat, _e=_engine):
                 return _run_malstone(scale, ctx, backend=_b, statistic=_s,
                                      engine=_e)
+
+
+# ------------------------------------------------- lossless shuffle sweep
+# The mapreduce shuffle delivers every record at ANY capacity factor by
+# re-exchanging bucket overflow in extra rounds (backends/mapreduce.py's
+# multi-round residual loop). This sweep turns the capacity-vs-rounds
+# tradeoff into a measured curve: each point times MalStone B at one
+# capacity factor and records the executed round count (plus deferred
+# and overflow counters — overflow is asserted 0, i.e. lossless) in the
+# BENCH json ``derived`` extras.
+LOSSLESS_CAPACITY_FACTORS = (0.25, 0.5, 1.0, 2.0)
+
+
+def _cf_slug(cf: float) -> str:
+    return f"cf{cf:g}".replace(".", "p")     # 0.25 -> cf0p25, 2.0 -> cf2
+
+
+def _run_mapreduce_lossless(scale: Scale, ctx: BenchContext, *, cf: float,
+                            engine: str = "oneshot") -> ScenarioResult:
+    from repro.core import ShuffleExhaustedError
+    res = _run_malstone(scale, ctx, backend="mapreduce", statistic="B",
+                        engine=engine, capacity_factor=cf,
+                        collect_shuffle_stats=True)
+    overflow = res.derived["shuffle_overflow"]
+    if overflow != 0:
+        # the sweep's whole claim is losslessness — never record timings
+        # for a shuffle that dropped records (explicit raise, not assert:
+        # this must survive python -O)
+        raise ShuffleExhaustedError(
+            f"mapreduce_lossless cf={cf} ({engine}) finished with "
+            f"{overflow} undelivered records — the round bound has "
+            f"regressed")
+    return res
+
+
+for _cf in LOSSLESS_CAPACITY_FACTORS:
+    @_register(f"mapreduce_lossless_{_cf_slug(_cf)}", "lossless",
+               {"backend": "mapreduce", "statistic": "B",
+                "engine": "oneshot", "capacity_factor": _cf})
+    def _scenario_lossless(scale, ctx, *, _c=_cf):
+        return _run_mapreduce_lossless(scale, ctx, cf=_c)
+
+
+@_register("mapreduce_lossless_streaming_cf0p5", "lossless",
+           {"backend": "mapreduce", "statistic": "B",
+            "engine": "streaming", "capacity_factor": 0.5})
+def _scenario_lossless_streaming(scale, ctx):
+    return _run_mapreduce_lossless(scale, ctx, cf=0.5, engine="streaming")
 
 
 # ------------------------------------------------------------- kernel paths
@@ -361,6 +433,11 @@ def preset_scenario_names(preset: str) -> list:
                         and sc.params["engine"] == "oneshot"):
                     continue
             if sc.group == "sweep" and sc.params.get("multiplier") == 4:
+                continue
+            if (sc.group == "lossless"
+                    and name != "mapreduce_lossless_cf0p25"):
+                # one multi-round point keeps the perf gate on the
+                # residual-shuffle code path without running the full sweep
                 continue
         names.append(name)
     return names

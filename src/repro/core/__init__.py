@@ -20,6 +20,7 @@ from repro.core.spm import (
     malstone_a_from_log,
     malstone_b_from_log,
 )
+from repro.core.backends import ShuffleExhaustedError, ShuffleStats
 from repro.core.runner import (
     malstone_run,
     malstone_run_partitioned,
@@ -29,6 +30,8 @@ from repro.core.runner import (
 )
 
 __all__ = [
+    "ShuffleExhaustedError",
+    "ShuffleStats",
     "site_week_histogram",
     "malstone_a",
     "malstone_b",

@@ -24,7 +24,12 @@ log sharded over the record dimension on ``axis_name``.
 
 from repro.core.backends.streams import streams_histogram
 from repro.core.backends.sphere import sphere_histogram
-from repro.core.backends.mapreduce import mapreduce_histogram, shuffle_stats
+from repro.core.backends.mapreduce import (
+    ShuffleExhaustedError,
+    ShuffleStats,
+    mapreduce_histogram,
+    shuffle_stats,
+)
 
 BACKENDS = ("streams", "sphere", "mapreduce")
 
@@ -33,5 +38,7 @@ __all__ = [
     "sphere_histogram",
     "mapreduce_histogram",
     "shuffle_stats",
+    "ShuffleStats",
+    "ShuffleExhaustedError",
     "BACKENDS",
 ]

@@ -6,18 +6,28 @@ the records for its sites. The defining cost is that *every record* crosses
 the network (plus, on 2010 Hadoop, spills to disk twice) — this is why
 MapReduce lost to Streams by ~5x and to Sphere by ~13-20x in Tables 4/5.
 
-TPU adaptation: the shuffle is a fixed-capacity bucketed ``lax.all_to_all``.
-TPU collectives need static shapes, so each device packs its records into
-``[P, capacity]`` buckets (dest = site_id % P, the paper's Partitioner);
-rare overflow beyond capacity is dropped and *counted* (``shuffle_stats``
-reports it; tests assert zero at sane capacity factors). After the exchange,
-device ``d`` holds every record whose ``site_id % P == d`` and reduces them
-with the same histogram primitive as the other backends.
+TPU adaptation: the shuffle is a **multi-round** fixed-capacity bucketed
+``lax.all_to_all``. TPU collectives need static shapes, so each device packs
+its records into ``[P, capacity]`` buckets (dest = site_id % P, the paper's
+Partitioner) and exchanges them; records that do not fit their bucket are
+*not dropped* — they stay in a same-shape residual buffer and a
+``lax.while_loop`` re-packs and re-exchanges them until the psum'd global
+leftover count reaches zero. The shuffle is therefore exact at **any**
+``capacity_factor``: the paper's MapReduce ships every record to its
+reducer, and so do we — a small capacity just pays for it in extra rounds
+(the measured rounds-vs-capacity tradeoff is the ``mapreduce_lossless_*``
+bench scenarios). Rounds are bounded statically: a device holds at most
+``n`` records for any one destination and each round drains ``capacity`` of
+them, so ``ceil(n / capacity)`` rounds always suffice; ``max_rounds=None``
+uses exactly that bound, making the loop provably lossless. An explicit
+smaller ``max_rounds`` is an escape hatch for bounding worst-case latency —
+the runner raises ``ShuffleExhaustedError`` if it is exhausted with records
+still undelivered (never a silent drop).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,14 +37,45 @@ from repro.common.types import EventLog, WEEKS_PER_YEAR
 from repro.core.spm import site_week_histogram
 
 
+class ShuffleExhaustedError(RuntimeError):
+    """``max_rounds`` shuffle rounds ran and records remain undelivered."""
+
+
 class ShuffleStats(NamedTuple):
-    sent: jnp.ndarray       # records successfully packed (this device)
-    overflow: jnp.ndarray   # records dropped due to bucket capacity
-    capacity: int           # per-destination bucket capacity
+    """Shuffle accounting. From ``mapreduce_histogram`` the fields cover the
+    whole multi-round loop (per device; ``shuffle_stats`` psums them):
+
+    - ``sent``: records delivered to their reducer, summed over rounds;
+    - ``overflow``: records still undelivered when the loop stopped —
+      **0 means the shuffle was lossless** (always, unless an explicit
+      ``max_rounds`` cut the loop short);
+    - ``capacity``: per-destination bucket capacity of each round;
+    - ``rounds``: shuffle rounds executed (identical on every device; the
+      streaming engine reports the max over chunks);
+    - ``residual``: total deferred-record re-packs — the sum over rounds of
+      records pushed to the next round (a record deferred k times counts k
+      times), i.e. how much re-shuffle pressure the capacity caused.
+
+    ``_pack_buckets`` fills the same tuple for its single round
+    (``rounds=1``, ``residual == overflow`` = this round's leftover).
+    """
+
+    sent: jnp.ndarray
+    overflow: jnp.ndarray
+    capacity: jnp.ndarray
+    rounds: jnp.ndarray = 1
+    residual: jnp.ndarray = 0
 
 
 def _pack_buckets(log: EventLog, num_partitions: int, capacity: int):
-    """Scatter records into a [P, C, fields] bucket buffer by site % P."""
+    """Scatter records into a [P, C, fields] bucket buffer by site % P.
+
+    Returns ``(bucket_columns, residual_log, stats)``: records beyond
+    ``capacity`` for their destination are kept (not dropped) in
+    ``residual_log`` — an ``EventLog`` of the same record count whose
+    ``valid`` mask marks exactly the leftover records, ready to be packed
+    again by the next shuffle round.
+    """
     n = log.num_records
     dest = (log.site_id % num_partitions).astype(jnp.int32)
     valid = log.valid_mask()
@@ -61,9 +102,31 @@ def _pack_buckets(log: EventLog, num_partitions: int, capacity: int):
     mark = scatter(log.mark, 0)
     vmask = site >= 0
 
-    overflow = jnp.sum((~keep) & (dest_sorted < num_partitions))
+    leftover = (~keep) & (dest_sorted < num_partitions)
+    residual = EventLog(
+        site_id=log.site_id[order], entity_id=log.entity_id[order],
+        timestamp=log.timestamp[order], mark=log.mark[order],
+        valid=leftover)
+    overflow = jnp.sum(leftover)
     sent = jnp.sum(keep)
-    return (site, entity, ts, mark, vmask), ShuffleStats(sent, overflow, capacity)
+    stats = ShuffleStats(sent=sent, overflow=overflow, capacity=capacity,
+                         rounds=1, residual=overflow)
+    return (site, entity, ts, mark, vmask), residual, stats
+
+
+def static_capacity(num_records: int, parts: int,
+                    capacity_factor: float) -> int:
+    """Per-destination bucket capacity for a per-device record count —
+    the single formula both the shuffle and its callers' static checks
+    use (keeping them from drifting apart)."""
+    return int(max(1, round(num_records / parts * capacity_factor)))
+
+
+def shuffle_round_bound(num_records: int, capacity: int) -> int:
+    """Static round count that provably drains any skew: a device holds at
+    most ``num_records`` records for one destination and each round moves
+    ``capacity`` of them."""
+    return max(1, -(-num_records // capacity))
 
 
 def mapreduce_histogram(log: EventLog,
@@ -72,52 +135,108 @@ def mapreduce_histogram(log: EventLog,
                         axis_name: str = "data",
                         capacity_factor: float = 2.0,
                         histogram_fn=site_week_histogram,
+                        max_rounds: Optional[int] = None,
                         ) -> tuple[jnp.ndarray, ShuffleStats]:
-    """Shuffle + reduce. Returns (owned histogram, shuffle stats).
+    """Multi-round lossless shuffle + reduce. Returns (owned hist, stats).
 
     Device ``d`` owns the strided site set ``{j : j % P == d}`` (paper's
     Partitioner); the returned histogram is ``[num_sites // P, W, 2]`` with
     local row ``i`` = global site ``i * P + d``. ``num_sites % P == 0``
     required (runner pads).
+
+    The shuffle loop re-exchanges residual (bucket-overflow) records until
+    the global leftover count is zero, so the histogram is exact at any
+    ``capacity_factor`` — including under MalGen's power-law site skew with
+    every record on one site. ``max_rounds=None`` uses the static bound
+    ``ceil(n / capacity)`` (provably sufficient); an explicit smaller value
+    bounds latency but may stop with ``stats.overflow > 0`` — callers that
+    thread it must check (``repro.core.runner`` raises
+    ``ShuffleExhaustedError``).
     """
     p = axis_size(axis_name)
     n = log.num_records
-    capacity = int(max(1, round(n / p * capacity_factor)))
+    capacity = static_capacity(n, p, capacity_factor)
+    bound = shuffle_round_bound(n, capacity)
+    if max_rounds is None:
+        max_rounds = bound
+    if max_rounds < 1:
+        raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
 
-    (site, entity, ts, mark, vmask), stats = _pack_buckets(log, p, capacity)
+    my = jax.lax.axis_index(axis_name)
+    s_local = num_sites // p
 
-    # The shuffle: row i of every device's buffer goes to device i.
     def exch(x):
         return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
                                   tiled=True)
 
-    site, entity, ts, mark = exch(site), exch(entity), exch(ts), exch(mark)
-    vmask = exch(vmask)
+    def one_round(pending: EventLog):
+        """Pack -> all_to_all -> local reduce. Returns the histogram
+        increment of the received records plus the residual for the next
+        round."""
+        cols, residual, rstats = _pack_buckets(pending, p, capacity)
+        site, entity, ts, mark, vmask = (exch(c) for c in cols)
+        shuffled = EventLog(
+            site_id=site.reshape(-1),
+            entity_id=entity.reshape(-1),
+            timestamp=ts.reshape(-1),
+            mark=mark.reshape(-1),
+            valid=vmask.reshape(-1),
+        )
+        # Re-base strided site ids to local dense rows: local = site // P.
+        # All received records satisfy site % P == my by construction;
+        # guard anyway.
+        ok = shuffled.valid & ((shuffled.site_id % p) == my)
+        rebased = shuffled._replace(site_id=shuffled.site_id // p, valid=ok)
+        return histogram_fn(rebased, s_local, num_weeks), residual, rstats
 
-    my = jax.lax.axis_index(axis_name)
-    shuffled = EventLog(
-        site_id=site.reshape(-1),
-        entity_id=entity.reshape(-1),
-        timestamp=ts.reshape(-1),
-        mark=mark.reshape(-1),
-        valid=vmask.reshape(-1),
+    # Normalize the pending-record pytree so the while carry has a fixed
+    # structure (the shuffle only moves the four record columns + validity).
+    pending0 = EventLog(site_id=log.site_id, entity_id=log.entity_id,
+                        timestamp=log.timestamp, mark=log.mark,
+                        valid=log.valid_mask())
+
+    def body(carry):
+        rounds, _, hist, pending, sent, deferred = carry
+        inc, residual, rstats = one_round(pending)
+        return (rounds + 1,
+                jax.lax.psum(rstats.overflow, axis_name),
+                hist + inc,
+                residual,
+                sent + rstats.sent,
+                deferred + rstats.overflow)
+
+    def cond(carry):
+        rounds, global_left = carry[0], carry[1]
+        return (global_left > 0) & (rounds < max_rounds)
+
+    carry0 = (jnp.int32(0),
+              jax.lax.psum(jnp.sum(pending0.valid), axis_name),
+              jnp.zeros((s_local, num_weeks, 2), jnp.int32),
+              pending0,
+              jnp.int32(0),
+              jnp.int32(0))
+    rounds, _, hist, pending, sent, deferred = jax.lax.while_loop(
+        cond, body, carry0)
+
+    stats = ShuffleStats(
+        sent=sent,
+        overflow=jnp.sum(pending.valid_mask()),  # undelivered after loop
+        capacity=jnp.int32(capacity),
+        rounds=rounds,
+        residual=deferred,
     )
-    # Re-base strided site ids to local dense rows: local = site // P. All
-    # received records satisfy site % P == my by construction; guard anyway.
-    ok = shuffled.valid & ((shuffled.site_id % p) == my)
-    local_rows = shuffled.site_id // p
-    rebased = shuffled._replace(site_id=local_rows, valid=ok)
-
-    hist = histogram_fn(rebased, num_sites // p, num_weeks)
     return hist, stats
 
 
 def shuffle_stats(stats: ShuffleStats, axis_name: str = "data") -> ShuffleStats:
-    """Global shuffle accounting (psum over the mesh)."""
+    """Global shuffle accounting: psum the per-device counters (``rounds``
+    and ``capacity`` are device-uniform and pass through unchanged)."""
     return ShuffleStats(
         sent=jax.lax.psum(stats.sent, axis_name),
         overflow=jax.lax.psum(stats.overflow, axis_name),
         capacity=stats.capacity,
+        rounds=stats.rounds,
+        residual=jax.lax.psum(stats.residual, axis_name),
     )
 
 

@@ -20,11 +20,63 @@ from repro.common.compat import shard_map
 from repro.common.types import EventLog, SpmResult, WEEKS_PER_YEAR
 from repro.core import spm as spm_lib
 from repro.core.backends import (
+    ShuffleExhaustedError,
+    ShuffleStats,
     mapreduce_histogram,
+    shuffle_stats,
     sphere_histogram,
     streams_histogram,
 )
 from repro.core.backends.mapreduce import mapreduce_combiner_histogram
+
+_STATS_SPEC = ShuffleStats(P(), P(), P(), P(), P())
+
+
+def _raise_if_exhausted(stats: Optional[ShuffleStats]) -> None:
+    """Host-side escape-hatch check: an explicit ``max_shuffle_rounds`` may
+    stop the shuffle loop with records undelivered — that must be an error,
+    never a silent drop. Only runs eagerly; the under-trace case is closed
+    by ``_check_round_cap_under_trace`` below."""
+    if stats is None or isinstance(stats.overflow, jax.core.Tracer):
+        return
+    undelivered = int(stats.overflow)
+    if undelivered > 0:
+        raise ShuffleExhaustedError(
+            f"mapreduce shuffle stopped after {int(stats.rounds)} rounds "
+            f"with {undelivered} records undelivered (bucket capacity "
+            f"{int(stats.capacity)}); raise max_shuffle_rounds (None = "
+            f"the provably sufficient ceil(records/capacity) bound) or "
+            f"capacity_factor")
+
+
+def _check_round_cap_under_trace(inputs, max_shuffle_rounds: Optional[int],
+                                 return_shuffle_stats: bool,
+                                 shard_records: int, parts: int,
+                                 capacity_factor: float) -> None:
+    """Close the silent-drop hole for traced callers: under an outer
+    ``jax.jit`` the post-run overflow check cannot run, so an explicit
+    round cap below the provable bound could drop records with no error.
+    All quantities here are static, so refuse that combination at trace
+    time unless the caller takes responsibility for checking the returned
+    stats (``return_shuffle_stats=True``)."""
+    from repro.core.backends.mapreduce import (
+        shuffle_round_bound,
+        static_capacity,
+    )
+    if max_shuffle_rounds is None or return_shuffle_stats:
+        return
+    if not any(isinstance(x, jax.core.Tracer)
+               for x in jax.tree_util.tree_leaves(inputs)):
+        return  # eager call: _raise_if_exhausted will see concrete stats
+    bound = shuffle_round_bound(
+        shard_records, static_capacity(shard_records, parts, capacity_factor))
+    if max_shuffle_rounds < bound:
+        raise ValueError(
+            f"max_shuffle_rounds={max_shuffle_rounds} is below the provable "
+            f"lossless bound ({bound}) and the call is being traced, so the "
+            f"post-run overflow check cannot raise — records could be "
+            f"silently dropped. Pass return_shuffle_stats=True and check "
+            f"stats.overflow yourself, or raise max_shuffle_rounds")
 
 
 def _pad_sites(num_sites: int, parts: int) -> int:
@@ -70,20 +122,38 @@ def malstone_run(log: EventLog,
                  num_weeks: int = WEEKS_PER_YEAR,
                  axis_name="data",
                  capacity_factor: float = 2.0,
+                 max_shuffle_rounds: Optional[int] = None,
                  histogram_fn=None,
-                 donate_log: bool = False) -> SpmResult:
+                 donate_log: bool = False,
+                 return_shuffle_stats: bool = False):
     """Run MalStone over the mesh. Returns a replicated, full-site SpmResult.
 
     ``axis_name`` may be a single mesh axis or a tuple (the production
     meshes treat every chip as a data-cloud node: ("pod","data","model")).
     The log must be shardable over the record dimension by the total size of
     ``axis_name`` (caller pads with ``valid=False`` rows if needed).
+
+    The ``mapreduce`` backend's shuffle is lossless at any
+    ``capacity_factor`` (multi-round residual exchange — see
+    ``backends/mapreduce.py``). ``max_shuffle_rounds=None`` uses the
+    provably sufficient round bound; an explicit smaller cap raises
+    ``ShuffleExhaustedError`` if records remain undelivered (and when the
+    call is traced under an outer ``jax.jit`` — where that post-run check
+    cannot fire — an under-bound cap is refused at trace time unless
+    ``return_shuffle_stats=True`` puts the overflow counter in the
+    caller's hands). With
+    ``donate_log=True`` the log's buffers are donated to the computation
+    (``jax.jit(..., donate_argnums=0)``) — the caller must not reuse the
+    log afterwards on backends that honor donation (CPU ignores it with a
+    warning). ``return_shuffle_stats=True`` returns
+    ``(SpmResult, ShuffleStats)`` — the globally psum'd shuffle accounting
+    for ``mapreduce``, ``None`` for the other backends (no record shuffle).
     """
     parts = _axis_size(mesh, axis_name)
     s_pad = _pad_sites(num_sites, parts)
     hist_fn = histogram_fn or spm_lib.site_week_histogram
 
-    def local(log_shard: EventLog) -> jnp.ndarray:
+    def local(log_shard: EventLog):
         if backend == "streams":
             return streams_histogram(log_shard, s_pad, num_weeks, axis_name,
                                      histogram_fn=hist_fn)
@@ -95,26 +165,40 @@ def malstone_run(log: EventLog,
             # ``malstone_run_partitioned``).
             return jax.lax.all_gather(owned, axis_name, axis=0, tiled=True)
         if backend in ("mapreduce", "mapreduce_combiner"):
+            stats = None
             if backend == "mapreduce":
-                owned, _ = mapreduce_histogram(
+                owned, stats = mapreduce_histogram(
                     log_shard, s_pad, num_weeks, axis_name,
-                    capacity_factor=capacity_factor, histogram_fn=hist_fn)
+                    capacity_factor=capacity_factor, histogram_fn=hist_fn,
+                    max_rounds=max_shuffle_rounds)
+                stats = shuffle_stats(stats, axis_name)
             else:
                 owned = mapreduce_combiner_histogram(
                     log_shard, s_pad, num_weeks, axis_name,
                     histogram_fn=hist_fn)
             # owned rows are strided (site = row * P + d): gather + unstride.
             gathered = jax.lax.all_gather(owned, axis_name, axis=0)  # [P,S/P,W,2]
-            return jnp.transpose(gathered, (1, 0, 2, 3)).reshape(
+            full = jnp.transpose(gathered, (1, 0, 2, 3)).reshape(
                 s_pad, num_weeks, 2)
+            return (full, stats) if backend == "mapreduce" else full
         raise ValueError(f"unknown backend {backend!r}")
 
     spec = _log_pspec(log, axis_name)
-    fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=P(),
+    out_specs = (P(), _STATS_SPEC) if backend == "mapreduce" else P()
+    fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=out_specs,
                    check_vma=False)
-    hist = jax.jit(fn)(log)
-    hist = hist[:num_sites]
-    return _finalize(hist, statistic)
+    jit_fn = jax.jit(fn, donate_argnums=(0,) if donate_log else ())
+    stats = None
+    if backend == "mapreduce":
+        _check_round_cap_under_trace(
+            log, max_shuffle_rounds, return_shuffle_stats,
+            log.num_records // parts, parts, capacity_factor)
+        hist, stats = jit_fn(log)
+        _raise_if_exhausted(stats)
+    else:
+        hist = jit_fn(log)
+    result = _finalize(hist[:num_sites], statistic)
+    return (result, stats) if return_shuffle_stats else result
 
 
 def malstone_run_streaming(seed_or_log, num_sites: int, *,
@@ -127,16 +211,19 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
                            num_weeks: int = WEEKS_PER_YEAR,
                            axis_name="data",
                            capacity_factor: float = 2.0,
-                           histogram_fn=None) -> SpmResult:
+                           max_shuffle_rounds: Optional[int] = None,
+                           histogram_fn=None,
+                           return_shuffle_stats: bool = False):
     """Streaming chunked MalStone: ``lax.scan`` over fixed-size record
     chunks with a histogram carry — peak memory O(chunk + sites x weeks)
     instead of O(records). Bit-identical integer histograms to
-    ``malstone_run`` (the site x week histogram is a commutative monoid, so
-    chunk accumulation is exact). Exception: the ``mapreduce`` backend's
-    per-chunk shuffle has fixed-capacity buckets and drops (and counts)
-    overflow just like the one-shot path — pass ``capacity_factor >= P``
-    for a provably lossless shuffle (see streaming.py's capacity caveat);
-    the other three backends are unconditionally exact.
+    ``malstone_run`` for **all four backends at any** ``capacity_factor``
+    (the site x week histogram is a commutative monoid, so chunk
+    accumulation is exact, and the ``mapreduce`` per-chunk shuffle is the
+    same lossless multi-round residual loop as the one-shot path).
+    ``max_shuffle_rounds`` / ``return_shuffle_stats`` behave exactly as in
+    ``malstone_run``; streaming ``ShuffleStats`` counters accumulate over
+    chunks and ``rounds`` is the max any single chunk needed.
 
     Two modes, selected by the first argument:
 
@@ -157,6 +244,11 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
 
     parts = _axis_size(mesh, axis_name)
     s_pad = _pad_sites(num_sites, parts)
+    if backend == "mapreduce":
+        # per-chunk shuffle: the capacity/round bound is set by chunk size
+        _check_round_cap_under_trace(
+            seed_or_log, max_shuffle_rounds, return_shuffle_stats,
+            chunk_records, parts, capacity_factor)
 
     if isinstance(seed_or_log, SeedInfo):
         if cfg is None or num_chunks is None:
@@ -167,34 +259,41 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
                 f"({parts} devices)")
         seed = seed_or_log
         cpd = num_chunks // parts
+        out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
 
-        def run_gen() -> jnp.ndarray:
+        def run_gen():
             return streaming_histogram_generate(
                 seed, cfg, s_pad, chunks_per_device=cpd,
                 chunk_records=chunk_records, num_weeks=num_weeks,
                 axis_name=axis_name, backend=backend,
-                histogram_fn=histogram_fn, capacity_factor=capacity_factor)
+                histogram_fn=histogram_fn, capacity_factor=capacity_factor,
+                max_rounds=max_shuffle_rounds)
 
-        fn = shard_map(run_gen, mesh=mesh, in_specs=(), out_specs=P(),
+        fn = shard_map(run_gen, mesh=mesh, in_specs=(), out_specs=out_specs,
                        check_vma=False)
-        hist = jax.jit(fn)()
+        hist, stats = jax.jit(fn)()
     else:
         log = seed_or_log
         per_dev = -(-log.num_records // (parts * chunk_records)) * chunk_records
         log = pad_log_to(log, per_dev * parts)
+        out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
 
-        def run_log(log_shard: EventLog) -> jnp.ndarray:
+        def run_log(log_shard: EventLog):
             return streaming_histogram_from_log(
                 log_shard, s_pad, chunk_records=chunk_records,
                 num_weeks=num_weeks, axis_name=axis_name, backend=backend,
-                histogram_fn=histogram_fn, capacity_factor=capacity_factor)
+                histogram_fn=histogram_fn, capacity_factor=capacity_factor,
+                max_rounds=max_shuffle_rounds)
 
         spec = _log_pspec(log, axis_name)
-        fn = shard_map(run_log, mesh=mesh, in_specs=(spec,), out_specs=P(),
-                       check_vma=False)
-        hist = jax.jit(fn)(log)
+        fn = shard_map(run_log, mesh=mesh, in_specs=(spec,),
+                       out_specs=out_specs, check_vma=False)
+        hist, stats = jax.jit(fn)(log)
 
-    return _finalize(hist[:num_sites], statistic)
+    if backend == "mapreduce":
+        _raise_if_exhausted(stats)
+    result = _finalize(hist[:num_sites], statistic)
+    return (result, stats) if return_shuffle_stats else result
 
 
 def malstone_run_partitioned(log: EventLog,
@@ -230,13 +329,24 @@ def malstone_lowerable(num_records_global: int, num_sites: int, *,
                        statistic: str = "B",
                        num_weeks: int = WEEKS_PER_YEAR,
                        axis_name=("data", "model"),
-                       capacity_factor: float = 1.5):
+                       capacity_factor: float = 1.5,
+                       max_shuffle_rounds: Optional[int] = None):
     """(fn, example_log_SDS) for dry-run lowering of the paper's workload.
 
     The log is a ShapeDtypeStruct stand-in (no allocation): the paper's
     benchmark classes are huge (B-10 = 10 billion records = 1 TB), exactly
     what ``.lower().compile()`` is for. Every chip acts as one data-cloud
-    node (records sharded over all mesh axes)."""
+    node (records sharded over all mesh axes).
+
+    Note for HLO byte accounting: the ``mapreduce`` shuffle is now a
+    multi-round ``while`` loop, and the trip-count-aware analyzer reports
+    its *static worst-case* rounds. Pass ``max_shuffle_rounds=1`` to
+    recover the expected-case single-round collective bytes — but treat
+    that compiled artifact as **analysis-only**: a cap below the provable
+    bound truncates the shuffle loop in the compiled program itself, and
+    this path discards ``ShuffleStats``, so executing it on real skewed
+    data would drop residual records with no error (use ``malstone_run``
+    for anything that actually runs; it enforces the lossless contract)."""
     parts = _axis_size(mesh, axis_name)
     n = (num_records_global // parts) * parts
     s_pad = _pad_sites(num_sites, parts)
@@ -252,7 +362,8 @@ def malstone_lowerable(num_records_global: int, num_sites: int, *,
             elif backend == "mapreduce":
                 hist, _ = mapreduce_histogram(
                     log_shard, s_pad, num_weeks, axis_name,
-                    capacity_factor=capacity_factor)
+                    capacity_factor=capacity_factor,
+                    max_rounds=max_shuffle_rounds)
             elif backend == "mapreduce_combiner":
                 hist = mapreduce_combiner_histogram(
                     log_shard, s_pad, num_weeks, axis_name)
@@ -293,7 +404,11 @@ def pad_log_to(log: EventLog, target: int) -> EventLog:
             return log._replace(valid=jnp.ones((n,), bool))
         return log
     pad = target - n
-    assert pad > 0, (n, target)
+    if pad < 0:
+        raise ValueError(
+            f"pad_log_to target ({target}) is smaller than the log's record "
+            f"count ({n}); pass a target >= num_records (it should be the "
+            f"record count rounded up to a multiple of mesh size x chunk)")
 
     def padcol(x, fill=0):
         return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])

@@ -14,6 +14,10 @@ carry is buffer-donated by XLA, so the histogram is accumulated in place.
 Exactness: the site x week histogram is a commutative monoid (integer
 segment sums), so chunk-wise accumulation is *bit-identical* to the one-shot
 path for every backend — tests assert exact integer equality, not allclose.
+This holds **unconditionally**, at any ``capacity_factor``: the
+``mapreduce`` per-chunk shuffle is the same multi-round residual loop as the
+one-shot path (see ``backends/mapreduce.py``), which re-exchanges bucket
+overflow until every record reaches its reducer instead of dropping it.
 
 Backend dataflows inside the scan (all run INSIDE ``shard_map``):
 
@@ -22,21 +26,19 @@ Backend dataflows inside the scan (all run INSIDE ``shard_map``):
   the local-combine-first structure is exactly why these stacks won the
   paper's Tables 4/5, and it streams for free.
 - ``mapreduce`` / ``mapreduce_combiner``: the shuffle happens *per chunk*
-  inside the scan body (fixed-capacity bucketed all_to_all, resp. combiner
+  inside the scan body (multi-round bucketed all_to_all, resp. combiner
   block exchange), accumulating each device's owned strided site block; one
   all_gather + unstride after the scan. This keeps the defining
   every-record-crosses-the-network (resp. histogram-slices-cross) cost while
-  bounding the in-flight buffer to one chunk.
-
-Capacity caveat (``mapreduce`` only): the per-chunk shuffle buckets hold
-``chunk_records / P * capacity_factor`` records each, and small chunks see
-relatively more power-law skew than a whole shard — overflow drops records
-(counted, same as the one-shot path). For guaranteed-lossless streaming use
-``capacity_factor >= P`` (worst case: the entire chunk routes to one
-reducer); the exactness tests do exactly that.
+  bounding the in-flight buffer to one chunk. Small chunks see relatively
+  more power-law skew than a whole shard, so per-chunk shuffles simply run
+  more rounds — ``ShuffleStats`` (accumulated across chunks; ``rounds`` is
+  the max any chunk needed) makes that cost observable.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +47,9 @@ from repro.common.compat import axis_size
 from repro.common.types import EventLog, WEEKS_PER_YEAR
 from repro.core import spm as spm_lib
 from repro.core.backends import (
+    ShuffleStats,
     mapreduce_histogram,
+    shuffle_stats,
     sphere_histogram,  # noqa: F401  (re-exported for symmetry)
     streams_histogram,  # noqa: F401
 )
@@ -56,29 +60,53 @@ from repro.malgen.seeding import MalGenConfig, SeedInfo
 STREAM_BACKENDS = ("streams", "sphere", "mapreduce", "mapreduce_combiner")
 
 
-def _carry_init(backend: str, s_pad: int, num_weeks: int,
-                axis_name) -> jnp.ndarray:
-    """Zero histogram carry in the backend's accumulation layout."""
+def _zero_stats() -> ShuffleStats:
+    return ShuffleStats(sent=jnp.int32(0), overflow=jnp.int32(0),
+                        capacity=jnp.int32(0), rounds=jnp.int32(0),
+                        residual=jnp.int32(0))
+
+
+def _merge_stats(acc: ShuffleStats, chunk: ShuffleStats) -> ShuffleStats:
+    """Fold one chunk's shuffle stats into the scan carry: counters add,
+    ``rounds`` keeps the worst chunk, ``capacity`` is chunk-constant."""
+    return ShuffleStats(
+        sent=acc.sent + chunk.sent,
+        overflow=acc.overflow + chunk.overflow,
+        capacity=jnp.int32(chunk.capacity),
+        rounds=jnp.maximum(acc.rounds, jnp.int32(chunk.rounds)),
+        residual=acc.residual + chunk.residual,
+    )
+
+
+def _carry_init(backend: str, s_pad: int, num_weeks: int, axis_name):
+    """Zero carry in the backend's accumulation layout; the ``mapreduce``
+    carry also threads accumulated ShuffleStats."""
     if backend in ("streams", "sphere"):
         return jnp.zeros((s_pad, num_weeks, 2), jnp.int32)
-    if backend in ("mapreduce", "mapreduce_combiner"):
-        p = axis_size(axis_name)
-        return jnp.zeros((s_pad // p, num_weeks, 2), jnp.int32)
+    p = axis_size(axis_name)
+    owned = jnp.zeros((s_pad // p, num_weeks, 2), jnp.int32)
+    if backend == "mapreduce":
+        return (owned, _zero_stats())
+    if backend == "mapreduce_combiner":
+        return owned
     raise ValueError(f"unknown streaming backend {backend!r}")
 
 
-def _accumulate_chunk(carry: jnp.ndarray, chunk: EventLog, backend: str,
+def _accumulate_chunk(carry, chunk: EventLog, backend: str,
                       s_pad: int, num_weeks: int, axis_name,
-                      histogram_fn, capacity_factor: float) -> jnp.ndarray:
+                      histogram_fn, capacity_factor: float,
+                      max_rounds: Optional[int]):
     """Fold one chunk into the carry using the backend's dataflow."""
     if backend in ("streams", "sphere"):
         # local combine only; the cross-device collective runs post-scan
         return carry + histogram_fn(chunk, s_pad, num_weeks)
     if backend == "mapreduce":
-        owned, _ = mapreduce_histogram(
+        hist, stats = carry
+        owned, chunk_stats = mapreduce_histogram(
             chunk, s_pad, num_weeks, axis_name,
-            capacity_factor=capacity_factor, histogram_fn=histogram_fn)
-        return carry + owned
+            capacity_factor=capacity_factor, histogram_fn=histogram_fn,
+            max_rounds=max_rounds)
+        return (hist + owned, _merge_stats(stats, chunk_stats))
     if backend == "mapreduce_combiner":
         owned = mapreduce_combiner_histogram(
             chunk, s_pad, num_weeks, axis_name, histogram_fn=histogram_fn)
@@ -86,19 +114,25 @@ def _accumulate_chunk(carry: jnp.ndarray, chunk: EventLog, backend: str,
     raise ValueError(f"unknown streaming backend {backend!r}")
 
 
-def _post_scan_collective(carry: jnp.ndarray, backend: str, s_pad: int,
-                          num_weeks: int, axis_name) -> jnp.ndarray:
-    """Turn the per-device carry into the replicated full-site histogram,
-    matching ``malstone_run``'s layout exactly."""
+def _post_scan_collective(carry, backend: str, s_pad: int,
+                          num_weeks: int, axis_name):
+    """Turn the per-device carry into the replicated full-site histogram
+    (matching ``malstone_run``'s layout exactly) plus, for ``mapreduce``,
+    the globally accumulated ShuffleStats (``None`` otherwise)."""
     if backend == "streams":
-        return jax.lax.psum(carry, axis_name)
+        return jax.lax.psum(carry, axis_name), None
     if backend == "sphere":
         owned = jax.lax.psum_scatter(carry, axis_name, scatter_dimension=0,
                                      tiled=True)
-        return jax.lax.all_gather(owned, axis_name, axis=0, tiled=True)
+        return jax.lax.all_gather(owned, axis_name, axis=0, tiled=True), None
     # mapreduce*: carry rows are strided (site = row * P + d): gather+unstride
+    stats = None
+    if backend == "mapreduce":
+        carry, stats = carry
+        stats = shuffle_stats(stats, axis_name)
     gathered = jax.lax.all_gather(carry, axis_name, axis=0)  # [P, S/P, W, 2]
-    return jnp.transpose(gathered, (1, 0, 2, 3)).reshape(s_pad, num_weeks, 2)
+    hist = jnp.transpose(gathered, (1, 0, 2, 3)).reshape(s_pad, num_weeks, 2)
+    return hist, stats
 
 
 def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
@@ -107,16 +141,23 @@ def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
                                  axis_name="data",
                                  backend: str = "streams",
                                  histogram_fn=None,
-                                 capacity_factor: float = 2.0) -> jnp.ndarray:
+                                 capacity_factor: float = 2.0,
+                                 max_rounds: Optional[int] = None):
     """Chunked histogram over a materialized (per-device) log shard.
 
     Runs INSIDE ``shard_map``. The shard's record dim must be divisible by
-    ``chunk_records`` (the runner pads with invalid rows). Returns the
-    replicated ``[s_pad, num_weeks, 2]`` histogram.
+    ``chunk_records`` (the runner pads with invalid rows). Returns
+    ``(histogram, shuffle_stats)``: the replicated ``[s_pad, num_weeks, 2]``
+    histogram and, for the ``mapreduce`` backend, the chunk-accumulated
+    global ``ShuffleStats`` (``None`` for every other backend).
     """
     hist_fn = histogram_fn or spm_lib.site_week_histogram
     n = log_shard.num_records
-    assert n % chunk_records == 0, (n, chunk_records)
+    if n % chunk_records != 0:
+        raise ValueError(
+            f"per-device record count ({n}) must be divisible by "
+            f"chunk_records ({chunk_records}); pad the log with invalid "
+            f"rows first (see repro.core.pad_log_to)")
     num_chunks = n // chunk_records
 
     def to_chunks(col):
@@ -126,7 +167,8 @@ def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
 
     def step(carry, chunk):
         return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
-                                 axis_name, hist_fn, capacity_factor), None
+                                 axis_name, hist_fn, capacity_factor,
+                                 max_rounds), None
 
     carry, _ = jax.lax.scan(
         step, _carry_init(backend, s_pad, num_weeks, axis_name), chunks)
@@ -141,7 +183,8 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
                                  axis_name="data",
                                  backend: str = "streams",
                                  histogram_fn=None,
-                                 capacity_factor: float = 2.0) -> jnp.ndarray:
+                                 capacity_factor: float = 2.0,
+                                 max_rounds: Optional[int] = None):
     """Generate-as-you-go chunked histogram: each scan step regenerates its
     chunk from the seed (``generate_chunk`` is a pure function of
     (seed, chunk_id)) — the log never exists in memory.
@@ -149,8 +192,9 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
     Runs INSIDE ``shard_map``. Device ``d`` owns the contiguous chunk block
     ``[d * chunks_per_device, (d+1) * chunks_per_device)`` — the same layout
     ``generate_chunked_log`` materializes, so results are bit-identical to
-    running the one-shot path over that log. Returns the replicated
-    ``[s_pad, num_weeks, 2]`` histogram.
+    running the one-shot path over that log. Returns
+    ``(histogram, shuffle_stats)`` exactly like
+    ``streaming_histogram_from_log``.
     """
     hist_fn = histogram_fn or spm_lib.site_week_histogram
     first_chunk = jax.lax.axis_index(axis_name) * chunks_per_device
@@ -158,7 +202,8 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
     def step(carry, c):
         chunk = generate_chunk(seed, cfg, first_chunk + c, chunk_records)
         return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
-                                 axis_name, hist_fn, capacity_factor), None
+                                 axis_name, hist_fn, capacity_factor,
+                                 max_rounds), None
 
     carry, _ = jax.lax.scan(
         step, _carry_init(backend, s_pad, num_weeks, axis_name),

@@ -53,8 +53,19 @@ def main():
     ap.add_argument("--backend", default="sphere",
                     choices=("streams", "sphere", "mapreduce",
                              "mapreduce_combiner"))
-    ap.add_argument("--statistic", default="B", choices=("A", "B"))
+    ap.add_argument("--statistic", default="B",
+                    choices=("A", "B", "B-fixed"))
     ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--capacity-factor", type=float, default=2.0,
+                    help="mapreduce shuffle bucket capacity as a multiple of"
+                         " records/nodes; ANY value is lossless (smaller ="
+                         " less memory, more shuffle rounds)")
+    ap.add_argument("--max-shuffle-rounds", type=int, default=None,
+                    metavar="R",
+                    help="cap mapreduce shuffle rounds (default: the"
+                         " provably sufficient ceil(records/capacity) bound;"
+                         " an explicit cap errors out rather than dropping"
+                         " records if exhausted)")
     ap.add_argument("--stream-chunks", type=int, default=0, metavar="N",
                     help="stream each node's records in N regenerated chunks"
                          " (0 = one-shot materialized log)")
@@ -67,6 +78,13 @@ def main():
     mesh = jax.make_mesh((args.nodes,), ("data",))
     cfg = MalGenConfig(num_sites=args.sites, num_entities=args.entities)
     total = args.nodes * args.records_per_node
+
+    # the mapreduce shuffle is lossless at any capacity factor (multi-round
+    # residual exchange); surface its round/overflow accounting alongside
+    # the timing so the capacity/rounds tradeoff is visible per run
+    want_stats = args.backend == "mapreduce"
+    shuffle_kw = dict(capacity_factor=args.capacity_factor,
+                      max_shuffle_rounds=args.max_shuffle_rounds)
 
     if args.stream_chunks:
         if args.records_per_node % args.stream_chunks:
@@ -83,14 +101,15 @@ def main():
         print(f"  seeded in {time.perf_counter() - t0:.1f}s "
               f"(scatter payload {seed.seed_bytes / 1e6:.1f} MB)")
 
-        # capacity_factor = nodes makes the per-chunk mapreduce shuffle
-        # provably lossless (worst case: a whole chunk routes to one
-        # reducer), so every backend stays exact under streaming.
-        fn = jax.jit(lambda s: malstone_run_streaming(
-            s, cfg.num_sites, mesh=mesh, backend=args.backend,
-            chunk_records=chunk, statistic=args.statistic, cfg=cfg,
-            num_chunks=num_chunks,
-            capacity_factor=float(args.nodes)).rho)
+        def run_stream(s):
+            out = malstone_run_streaming(
+                s, cfg.num_sites, mesh=mesh, backend=args.backend,
+                chunk_records=chunk, statistic=args.statistic, cfg=cfg,
+                num_chunks=num_chunks, return_shuffle_stats=want_stats,
+                **shuffle_kw)
+            return (out[0].rho, out[1]) if want_stats else out.rho
+
+        fn = jax.jit(run_stream)
         run_args = (seed,)
     else:
         print(f"MalGen: {total:,} records ({total * 100 / 1e6:.0f} MB "
@@ -101,16 +120,21 @@ def main():
         jax.block_until_ready(log.site_id)
         print(f"  generated in {time.perf_counter() - t0:.1f}s")
 
-        fn = jax.jit(lambda l: malstone_run(
-            l, cfg.num_sites, mesh=mesh, statistic=args.statistic,
-            backend=args.backend).rho)
+        def run_oneshot(l):
+            out = malstone_run(
+                l, cfg.num_sites, mesh=mesh, statistic=args.statistic,
+                backend=args.backend, return_shuffle_stats=want_stats,
+                **shuffle_kw)
+            return (out[0].rho, out[1]) if want_stats else out.rho
+
+        fn = jax.jit(run_oneshot)
         run_args = (log,)
 
     # shared timing protocol (repro.bench.timing), with exactly ONE warmup
     # execution (max_warmup=1 opts out of steady-state probing): launcher
     # runs can be minutes each, so the adaptive warmup loop is not worth
     # up-to-8 extra executions here
-    timing, _ = time_callable(
+    timing, out = time_callable(
         fn, *run_args, warmup=1, iters=args.runs, max_warmup=1,
         on_sample=lambda r, us: print(
             f"  run {r + 1}: {us / 1e3:.1f} ms "
@@ -118,6 +142,26 @@ def main():
     mode = f"stream x{args.stream_chunks}" if args.stream_chunks else "one-shot"
     print(f"MalStone {args.statistic} [{args.backend}, {mode}] "
           f"median {timing.us_per_call / 1e3:.1f} ms over {args.runs} runs")
+
+    shuffle_derived = None
+    if want_stats:
+        stats = out[1]
+        if int(stats.overflow) != 0:
+            raise SystemExit(
+                f"shuffle exhausted --max-shuffle-rounds with "
+                f"{int(stats.overflow)} records undelivered")
+        shuffle_derived = {
+            "capacity_factor": args.capacity_factor,
+            "shuffle_rounds": int(stats.rounds),
+            "shuffle_capacity": int(stats.capacity),
+            "shuffle_sent": int(stats.sent),
+            "shuffle_deferred": int(stats.residual),
+            "shuffle_overflow": int(stats.overflow),
+        }
+        print(f"  shuffle: rounds={shuffle_derived['shuffle_rounds']} "
+              f"capacity={shuffle_derived['shuffle_capacity']}/dest "
+              f"deferred={shuffle_derived['shuffle_deferred']} "
+              f"overflow=0 (lossless)")
 
     if args.bench_json:
         engine = "streaming" if args.stream_chunks else "oneshot"
@@ -132,8 +176,9 @@ def main():
              "engine": engine, "nodes": args.nodes,
              "records_per_node": args.records_per_node,
              "sites": args.sites, "entities": args.entities,
-             "stream_chunks": args.stream_chunks},
-            timing, records=total)
+             "stream_chunks": args.stream_chunks,
+             "capacity_factor": args.capacity_factor},
+            timing, records=total, derived=shuffle_derived)
         out = schema.write_document(doc, path=args.bench_json)
         print(f"wrote {out}")
 

@@ -36,8 +36,11 @@ def main():
     results = {}
     for backend in ("streams", "sphere", "mapreduce",
                     "mapreduce_combiner"):
+        # capacity_factor 0.5 forces the mapreduce shuffle into multiple
+        # residual rounds under the real power-law skew — the result must
+        # still be exact (the shuffle is lossless at any capacity factor)
         res = malstone_run(log, cfg.num_sites, mesh=mesh, statistic="B",
-                           backend=backend, capacity_factor=3.0)
+                           backend=backend, capacity_factor=0.5)
         results[backend] = res
         np.testing.assert_array_equal(
             np.asarray(res.total), np.asarray(ref.total),
@@ -54,11 +57,29 @@ def main():
     for backend in ("streams", "sphere", "mapreduce",
                     "mapreduce_combiner"):
         res = malstone_run(log, cfg.num_sites, mesh=mesh, statistic="A",
-                           backend=backend, capacity_factor=3.0)
+                           backend=backend, capacity_factor=0.5)
         ref_a = malstone_single_device(log, cfg.num_sites, statistic="A")
         np.testing.assert_allclose(np.asarray(res.rho), np.asarray(ref_a.rho),
                                    rtol=1e-6)
     print("OK malstone A x4 backends")
+
+    # Adversarial skew: EVERY record on one site — the worst case a
+    # power-law can produce. The multi-round shuffle must deliver all of
+    # them (overflow 0) and agree with the single-device oracle exactly.
+    adv = log._replace(site_id=jax.numpy.zeros_like(log.site_id))
+    ref_adv = malstone_single_device(adv, cfg.num_sites, statistic="B")
+    res, stats = malstone_run(adv, cfg.num_sites, mesh=mesh, statistic="B",
+                              backend="mapreduce", capacity_factor=0.25,
+                              return_shuffle_stats=True)
+    np.testing.assert_array_equal(np.asarray(res.total),
+                                  np.asarray(ref_adv.total))
+    np.testing.assert_array_equal(np.asarray(res.marked),
+                                  np.asarray(ref_adv.marked))
+    assert int(stats.overflow) == 0, int(stats.overflow)
+    assert int(stats.rounds) > 1, int(stats.rounds)
+    assert int(stats.sent) == adv.num_records
+    print(f"OK adversarial single-site shuffle "
+          f"(rounds={int(stats.rounds)}, overflow=0)")
 
     # Partitioned (production sphere) path: concatenating owned blocks
     # reconstructs the padded full result.

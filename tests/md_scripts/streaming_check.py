@@ -34,14 +34,17 @@ def main():
     log = generate_chunked_log(seed, cfg, num_chunks, chunk)
 
     # Seed mode (generate-as-you-go) vs one-shot over the materialized log.
+    # Default capacity factor everywhere: the mapreduce shuffle is lossless
+    # at any value (multi-round residual exchange), so streaming no longer
+    # needs the old capacity_factor >= P crutch.
     for backend in BACKENDS:
         for stat in ("A", "B"):
             ref = malstone_run(log, cfg.num_sites, mesh=mesh, statistic=stat,
-                               backend=backend, capacity_factor=8.0)
+                               backend=backend)
             got = malstone_run_streaming(
                 seed, cfg.num_sites, mesh=mesh, backend=backend,
                 chunk_records=chunk, statistic=stat, cfg=cfg,
-                num_chunks=num_chunks, capacity_factor=8.0)
+                num_chunks=num_chunks)
             np.testing.assert_array_equal(
                 np.asarray(got.total), np.asarray(ref.total),
                 err_msg=f"seed-mode {backend}/{stat}: totals differ")
@@ -55,14 +58,11 @@ def main():
     slog, _ = generate_sharded_log(jax.random.key(3), cfg, 8, 2048)
     odd = jax.tree.map(lambda x: x[:10_000], slog)
     for backend in BACKENDS:
-        # capacity_factor = 8 (= P) makes the per-chunk mapreduce shuffle
-        # provably lossless, so exact equality is well-defined (see
-        # streaming.py's capacity caveat).
         ref = malstone_run(odd, cfg.num_sites, mesh=mesh, statistic="B",
-                           backend=backend, capacity_factor=8.0)
+                           backend=backend)
         got = malstone_run_streaming(
             odd, cfg.num_sites, mesh=mesh, backend=backend,
-            chunk_records=512, statistic="B", capacity_factor=8.0)
+            chunk_records=512, statistic="B")
         np.testing.assert_array_equal(
             np.asarray(got.total), np.asarray(ref.total),
             err_msg=f"log-mode {backend}: totals differ")
@@ -70,6 +70,25 @@ def main():
             np.asarray(got.marked), np.asarray(ref.marked),
             err_msg=f"log-mode {backend}: marked differ")
         print(f"OK log-mode backend={backend}")
+
+    # Adversarial skew through the streaming engine: every record on one
+    # site, sub-1.0 capacity — each per-chunk shuffle must run multiple
+    # residual rounds and still deliver everything.
+    adv = odd._replace(site_id=jax.numpy.zeros_like(odd.site_id))
+    ref = malstone_run(adv, cfg.num_sites, mesh=mesh, statistic="B",
+                       backend="streams")
+    got, stats = malstone_run_streaming(
+        adv, cfg.num_sites, mesh=mesh, backend="mapreduce",
+        chunk_records=512, statistic="B", capacity_factor=0.25,
+        return_shuffle_stats=True)
+    np.testing.assert_array_equal(np.asarray(got.total),
+                                  np.asarray(ref.total))
+    np.testing.assert_array_equal(np.asarray(got.marked),
+                                  np.asarray(ref.marked))
+    assert int(stats.overflow) == 0, int(stats.overflow)
+    assert int(stats.rounds) > 1, int(stats.rounds)
+    print(f"OK adversarial streaming shuffle "
+          f"(max rounds/chunk={int(stats.rounds)}, overflow=0)")
 
     print("ALL_OK")
 

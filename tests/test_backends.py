@@ -53,31 +53,54 @@ class TestPackBuckets:
 
     def test_routes_by_site_mod_p(self):
         log = self.make_log([0, 1, 2, 3, 4, 5, 6, 7])
-        (site, _, _, _, vmask), stats = _pack_buckets(log, 4, capacity=4)
+        (site, _, _, _, vmask), _, stats = _pack_buckets(log, 4, capacity=4)
         assert int(stats.overflow) == 0
         for p in range(4):
             routed = np.asarray(site[p])[np.asarray(vmask[p])]
             assert np.all(routed % 4 == p)
 
-    def test_overflow_counted(self):
+    def test_overflow_kept_as_residual(self):
+        """Records beyond capacity are NOT dropped: they stay valid in the
+        residual buffer, ready for the next shuffle round."""
         log = self.make_log([0] * 10)  # all to partition 0
-        (_, _, _, _, vmask), stats = _pack_buckets(log, 2, capacity=4)
+        (_, _, _, _, vmask), residual, stats = _pack_buckets(
+            log, 2, capacity=4)
         assert int(stats.overflow) == 6
         assert int(stats.sent) == 4
         assert int(np.asarray(vmask).sum()) == 4
+        # every overflowed record is recoverable from the residual
+        res_valid = np.asarray(residual.valid)
+        assert int(res_valid.sum()) == 6
+        assert np.all(np.asarray(residual.site_id)[res_valid] == 0)
+
+    def test_residual_drains_over_rounds(self):
+        """Re-packing the residual repeatedly delivers every record."""
+        log = self.make_log([0] * 10)
+        pending, delivered, rounds = log, 0, 0
+        while rounds < 10:
+            (_, _, _, _, vmask), pending, stats = _pack_buckets(
+                pending, 2, capacity=4)
+            delivered += int(stats.sent)
+            rounds += 1
+            if int(stats.overflow) == 0:
+                break
+        assert delivered == 10
+        assert rounds == 3   # ceil(10 / 4)
 
     def test_invalid_rows_never_packed(self):
         log = self.make_log([0, 1, 0, 1])
         log = log._replace(valid=jnp.array([True, False, True, False]))
-        (_, _, _, _, vmask), stats = _pack_buckets(log, 2, capacity=4)
+        (_, _, _, _, vmask), residual, stats = _pack_buckets(
+            log, 2, capacity=4)
         assert int(stats.sent) == 2
         assert int(np.asarray(vmask).sum()) == 2
+        assert int(np.asarray(residual.valid).sum()) == 0
 
     def test_histogram_of_packed_equals_direct(self):
         rng = np.random.default_rng(3)
         sites = rng.integers(0, 16, 200)
         log = self.make_log(sites)
-        (site, entity, ts, mark, vmask), stats = _pack_buckets(
+        (site, entity, ts, mark, vmask), _, stats = _pack_buckets(
             log, 4, capacity=200)
         assert int(stats.overflow) == 0
         packed = EventLog(
