@@ -387,6 +387,146 @@ def _malgen_encode(scale: Scale, ctx: BenchContext) -> ScenarioResult:
                           derived={"blob_bytes": len(blob)})
 
 
+# ------------------------------------------- device-parallel MalGen (phase 3)
+# Paper §5 generates each node's records *on* the node; the repo's host path
+# (``generate_sharded_log``) regenerates the global marked stream once per
+# shard and concatenates in host memory. These scenarios measure that gap:
+# the same total record budget generated by the host loop vs in place on the
+# mesh (``generate_shard_device`` under ``shard_map``), plus fused
+# generate+run end-to-end vs materialize-then-run.
+
+def _malgen_oneshot_seed(scale: Scale, ctx: BenchContext, nodes: int):
+    from repro.malgen import make_seed
+    return make_seed(jax.random.key(3), ctx.cfg(scale),
+                     nodes * scale.records_per_node)
+
+
+@_register("malgen_generate_host_sharded", "malgen",
+           {"phase": "generate", "malgen_path": "host"})
+def _malgen_generate_host_sharded(scale: Scale,
+                                  ctx: BenchContext) -> ScenarioResult:
+    """The host loop: every shard regenerates the global marked stream,
+    full log concatenated in host memory (seeding excluded — both paths
+    time phase 3 only)."""
+    from repro.malgen import generate_shard
+    from repro.malgen.generator import _concat_logs
+    cfg = ctx.cfg(scale)
+    nodes = ctx.nodes
+    seed = _malgen_oneshot_seed(scale, ctx, nodes)
+
+    def gen():
+        return _concat_logs(
+            [generate_shard(seed, cfg, s, nodes, scale.records_per_node)
+             for s in range(nodes)])
+
+    timing, _ = time_callable(gen, warmup=1, iters=scale.iters, max_warmup=1)
+    return ScenarioResult(timing=timing,
+                          records=nodes * scale.records_per_node,
+                          effective={"nodes": nodes})
+
+
+@_register("malgen_generate_device", "malgen",
+           {"phase": "generate", "malgen_path": "device"})
+def _malgen_generate_device(scale: Scale,
+                            ctx: BenchContext) -> ScenarioResult:
+    """Device-parallel phase 3: each device of the data mesh generates its
+    own shard in place (one jitted shard_map, nothing on host)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.common.compat import shard_map
+    from repro.common.types import EventLog
+    from repro.malgen import generate_shard_device
+    cfg = ctx.cfg(scale)
+    nodes = ctx.nodes
+    rpn = scale.records_per_node
+    seed = _malgen_oneshot_seed(scale, ctx, nodes)
+    mesh = ctx.mesh(nodes)
+
+    def local():
+        sid = jax.lax.axis_index("data")
+        return generate_shard_device(seed, cfg, sid, nodes, rpn)
+
+    spec = EventLog(site_id=P("data"), entity_id=P("data"),
+                    timestamp=P("data"), mark=P("data"),
+                    event_seq=P("data"), shard_hash=P("data"))
+    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(), out_specs=spec,
+                           check_vma=False))
+    timing, _ = time_callable(fn, warmup=scale.warmup, iters=scale.iters)
+    return ScenarioResult(timing=timing, records=nodes * rpn,
+                          effective={"nodes": nodes})
+
+
+def _run_e2e(scale: Scale, ctx: BenchContext, *, generation: str,
+             engine: str = "oneshot",
+             nodes: Optional[int] = None) -> ScenarioResult:
+    """End-to-end MalStone B (sphere): phase-3 generation + statistic per
+    call, seeding (phases 1-2) prebuilt outside timing for BOTH paths so
+    the comparison isolates where generation happens.
+
+    ``generation='fused'`` runs the device-parallel fused path (the log
+    never exists); ``'materialized'`` is the host shard loop + concat +
+    malstone_run — the generate-then-load anti-pattern."""
+    from repro.core import (
+        malstone_run,
+        malstone_run_generated,
+        malstone_run_generated_streaming,
+    )
+    from repro.malgen import generate_shard
+    from repro.malgen.generator import _concat_logs
+    cfg = ctx.cfg(scale)
+    nodes = nodes or ctx.nodes
+    rpn = scale.records_per_node
+    mesh = ctx.mesh(nodes)
+    total = nodes * rpn
+    # seed is closed over: its num_marked_events must stay static
+    seed = _malgen_oneshot_seed(scale, ctx, nodes)
+
+    if generation == "fused":
+        if engine == "oneshot":
+            fn = jax.jit(lambda: malstone_run_generated(
+                seed, cfg, mesh=mesh, records_per_shard=rpn,
+                statistic="B", backend="sphere").rho)
+        else:
+            fn = jax.jit(lambda: malstone_run_generated_streaming(
+                seed, cfg, mesh=mesh, records_per_shard=rpn,
+                chunk_records=scale.chunk_records,
+                statistic="B", backend="sphere").rho)
+        timing, _ = time_callable(fn, warmup=scale.warmup,
+                                  iters=scale.iters)
+    else:
+        def run():
+            log = _concat_logs(
+                [generate_shard(seed, cfg, s, nodes, rpn)
+                 for s in range(nodes)])
+            return malstone_run(log, cfg.num_sites, mesh=mesh,
+                                statistic="B", backend="sphere").rho
+
+        timing, _ = time_callable(run, warmup=1, iters=scale.iters,
+                                  max_warmup=1)
+    return ScenarioResult(timing=timing, records=total,
+                          effective={"nodes": nodes})
+
+
+@_register("e2e_fused_oneshot", "e2e",
+           {"backend": "sphere", "statistic": "B", "engine": "oneshot",
+            "generation": "fused"})
+def _e2e_fused_oneshot(scale, ctx):
+    return _run_e2e(scale, ctx, generation="fused", engine="oneshot")
+
+
+@_register("e2e_fused_streaming", "e2e",
+           {"backend": "sphere", "statistic": "B", "engine": "streaming",
+            "generation": "fused"})
+def _e2e_fused_streaming(scale, ctx):
+    return _run_e2e(scale, ctx, generation="fused", engine="streaming")
+
+
+@_register("e2e_materialized_oneshot", "e2e",
+           {"backend": "sphere", "statistic": "B", "engine": "oneshot",
+            "generation": "materialized"})
+def _e2e_materialized_oneshot(scale, ctx):
+    return _run_e2e(scale, ctx, generation="materialized")
+
+
 # ----------------------------------------------------------- scaling sweeps
 class ScenarioSkip(RuntimeError):
     """Raised by a scenario that cannot run in this environment."""
@@ -414,6 +554,19 @@ for _p in SWEEP_MESH_SIZES:
                 f"needs {_p} devices, host exposes {jax.device_count()}")
         return _run_malstone(scale, ctx, backend="sphere", statistic="B",
                              engine="oneshot", nodes=_p)
+
+for _p in SWEEP_MESH_SIZES:
+    @_register(f"sweep_gen_device_p{_p}", "sweep",
+               {"sweep": "gen_device_mesh", "nodes": _p,
+                "backend": "sphere", "statistic": "B", "engine": "oneshot",
+                "generation": "fused"})
+    def _sweep_gen_device(scale, ctx, *, _p=_p):
+        # fused generate+run at growing mesh size: generation parallelizes
+        # with the mesh (the host loop it replaces got *slower* per node)
+        if _p > jax.device_count():
+            raise ScenarioSkip(
+                f"needs {_p} devices, host exposes {jax.device_count()}")
+        return _run_e2e(scale, ctx, generation="fused", nodes=_p)
 
 
 # ------------------------------------------------------------------ selection

@@ -26,6 +26,15 @@ WEEKS_PER_YEAR = 52
 # Sentinel used for "entity never becomes marked".
 NEVER_MARKED = jnp.iinfo(jnp.int32).max
 
+# shard_hash value of padding rows (pad_log_to). Padding rows are
+# valid=False, which every aggregation ignores — that is the hard
+# guarantee. The sentinel additionally keeps their Event IDs disjoint
+# from real records in practice: no FNV-1a("node0000".."node9999") hash
+# equals it, and the one chunk id whose salted hash does
+# (chunk_shard_hash(857_579_650), the Murmur3-finalizer preimage of
+# 0xFFFFFFFF) is ~857M chunks beyond any real run.
+PAD_SHARD_HASH = 0xFFFF_FFFF
+
 
 class EventLog(NamedTuple):
     """A batch of site-entity-mark events (struct of arrays).

@@ -23,6 +23,8 @@ from repro.core.spm import (
 from repro.core.backends import ShuffleExhaustedError, ShuffleStats
 from repro.core.runner import (
     malstone_run,
+    malstone_run_generated,
+    malstone_run_generated_streaming,
     malstone_run_partitioned,
     malstone_run_streaming,
     malstone_single_device,
@@ -39,6 +41,8 @@ __all__ = [
     "malstone_a_from_log",
     "malstone_b_from_log",
     "malstone_run",
+    "malstone_run_generated",
+    "malstone_run_generated_streaming",
     "malstone_run_partitioned",
     "malstone_run_streaming",
     "malstone_single_device",

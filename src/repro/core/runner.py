@@ -17,7 +17,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.common.compat import shard_map
 
-from repro.common.types import EventLog, SpmResult, WEEKS_PER_YEAR
+from repro.common.types import (
+    EventLog,
+    PAD_SHARD_HASH,
+    SpmResult,
+    WEEKS_PER_YEAR,
+)
 from repro.core import spm as spm_lib
 from repro.core.backends import (
     ShuffleExhaustedError,
@@ -49,25 +54,21 @@ def _raise_if_exhausted(stats: Optional[ShuffleStats]) -> None:
             f"capacity_factor")
 
 
-def _check_round_cap_under_trace(inputs, max_shuffle_rounds: Optional[int],
-                                 return_shuffle_stats: bool,
-                                 shard_records: int, parts: int,
-                                 capacity_factor: float) -> None:
-    """Close the silent-drop hole for traced callers: under an outer
-    ``jax.jit`` the post-run overflow check cannot run, so an explicit
-    round cap below the provable bound could drop records with no error.
-    All quantities here are static, so refuse that combination at trace
-    time unless the caller takes responsibility for checking the returned
-    stats (``return_shuffle_stats=True``)."""
+def _refuse_under_bound_cap(max_shuffle_rounds: Optional[int],
+                            return_shuffle_stats: bool,
+                            shard_records: int, parts: int,
+                            capacity_factor: float) -> None:
+    """Refuse a traced call whose explicit round cap is below the provable
+    lossless bound (all bound math is static Python ints): the post-run
+    overflow check cannot raise under a trace, so such a cap could drop
+    records with no error — unless the caller takes responsibility for
+    checking the returned stats (``return_shuffle_stats=True``)."""
     from repro.core.backends.mapreduce import (
         shuffle_round_bound,
         static_capacity,
     )
     if max_shuffle_rounds is None or return_shuffle_stats:
         return
-    if not any(isinstance(x, jax.core.Tracer)
-               for x in jax.tree_util.tree_leaves(inputs)):
-        return  # eager call: _raise_if_exhausted will see concrete stats
     bound = shuffle_round_bound(
         shard_records, static_capacity(shard_records, parts, capacity_factor))
     if max_shuffle_rounds < bound:
@@ -77,6 +78,39 @@ def _check_round_cap_under_trace(inputs, max_shuffle_rounds: Optional[int],
             f"post-run overflow check cannot raise — records could be "
             f"silently dropped. Pass return_shuffle_stats=True and check "
             f"stats.overflow yourself, or raise max_shuffle_rounds")
+
+
+def _check_round_cap_under_trace(inputs, max_shuffle_rounds: Optional[int],
+                                 return_shuffle_stats: bool,
+                                 shard_records: int, parts: int,
+                                 capacity_factor: float) -> None:
+    """Close the silent-drop hole for traced callers whose *inputs* carry
+    tracers (the materialized/seed-mode drivers). The generated drivers
+    have no traced inputs — their seed is concrete by contract — so they
+    detect an outer trace on the *output* instead (see
+    ``_check_stats_or_refuse``)."""
+    if not any(isinstance(x, jax.core.Tracer)
+               for x in jax.tree_util.tree_leaves(inputs)):
+        return  # eager call: _raise_if_exhausted will see concrete stats
+    _refuse_under_bound_cap(max_shuffle_rounds, return_shuffle_stats,
+                            shard_records, parts, capacity_factor)
+
+
+def _check_stats_or_refuse(stats: Optional[ShuffleStats],
+                           max_shuffle_rounds: Optional[int],
+                           return_shuffle_stats: bool,
+                           shard_records: int, parts: int,
+                           capacity_factor: float) -> None:
+    """Post-run lossless check for the generated drivers. Their seed input
+    is always concrete (closed over), so input sniffing cannot detect an
+    outer ``jax.jit`` — but the returned stats can: traced stats mean the
+    overflow check below cannot fire, so an under-bound explicit cap must
+    be refused statically instead."""
+    if stats is not None and isinstance(stats.overflow, jax.core.Tracer):
+        _refuse_under_bound_cap(max_shuffle_rounds, return_shuffle_stats,
+                                shard_records, parts, capacity_factor)
+        return
+    _raise_if_exhausted(stats)
 
 
 def _pad_sites(num_sites: int, parts: int) -> int:
@@ -100,6 +134,44 @@ def _axis_size(mesh: Mesh, axis_name) -> int:
     for a in axis_name:
         size *= mesh.shape[a]
     return size
+
+
+def _local_backend_histogram(log_shard: EventLog, backend: str, s_pad: int,
+                             num_weeks: int, axis_name, hist_fn,
+                             capacity_factor: float,
+                             max_shuffle_rounds: Optional[int]):
+    """One device's backend dataflow -> (replicated full-site histogram,
+    ShuffleStats or None). Runs INSIDE ``shard_map``; shared by the
+    materialized (``malstone_run``) and fused-generation
+    (``malstone_run_generated``) drivers."""
+    if backend == "streams":
+        return streams_histogram(log_shard, s_pad, num_weeks, axis_name,
+                                 histogram_fn=hist_fn), None
+    if backend == "sphere":
+        owned = sphere_histogram(log_shard, s_pad, num_weeks, axis_name,
+                                 histogram_fn=hist_fn)
+        # Gather owned contiguous blocks back to full (tests / API parity;
+        # production would keep the partitioned result — see
+        # ``malstone_run_partitioned``).
+        return jax.lax.all_gather(owned, axis_name, axis=0, tiled=True), None
+    if backend in ("mapreduce", "mapreduce_combiner"):
+        stats = None
+        if backend == "mapreduce":
+            owned, stats = mapreduce_histogram(
+                log_shard, s_pad, num_weeks, axis_name,
+                capacity_factor=capacity_factor, histogram_fn=hist_fn,
+                max_rounds=max_shuffle_rounds)
+            stats = shuffle_stats(stats, axis_name)
+        else:
+            owned = mapreduce_combiner_histogram(
+                log_shard, s_pad, num_weeks, axis_name,
+                histogram_fn=hist_fn)
+        # owned rows are strided (site = row * P + d): gather + unstride.
+        gathered = jax.lax.all_gather(owned, axis_name, axis=0)  # [P,S/P,W,2]
+        full = jnp.transpose(gathered, (1, 0, 2, 3)).reshape(
+            s_pad, num_weeks, 2)
+        return full, stats
+    raise ValueError(f"unknown backend {backend!r}")
 
 
 def _log_pspec(log: EventLog, axis_name) -> EventLog:
@@ -154,34 +226,10 @@ def malstone_run(log: EventLog,
     hist_fn = histogram_fn or spm_lib.site_week_histogram
 
     def local(log_shard: EventLog):
-        if backend == "streams":
-            return streams_histogram(log_shard, s_pad, num_weeks, axis_name,
-                                     histogram_fn=hist_fn)
-        if backend == "sphere":
-            owned = sphere_histogram(log_shard, s_pad, num_weeks, axis_name,
-                                     histogram_fn=hist_fn)
-            # Gather owned contiguous blocks back to full (tests / API parity;
-            # production would keep the partitioned result — see
-            # ``malstone_run_partitioned``).
-            return jax.lax.all_gather(owned, axis_name, axis=0, tiled=True)
-        if backend in ("mapreduce", "mapreduce_combiner"):
-            stats = None
-            if backend == "mapreduce":
-                owned, stats = mapreduce_histogram(
-                    log_shard, s_pad, num_weeks, axis_name,
-                    capacity_factor=capacity_factor, histogram_fn=hist_fn,
-                    max_rounds=max_shuffle_rounds)
-                stats = shuffle_stats(stats, axis_name)
-            else:
-                owned = mapreduce_combiner_histogram(
-                    log_shard, s_pad, num_weeks, axis_name,
-                    histogram_fn=hist_fn)
-            # owned rows are strided (site = row * P + d): gather + unstride.
-            gathered = jax.lax.all_gather(owned, axis_name, axis=0)  # [P,S/P,W,2]
-            full = jnp.transpose(gathered, (1, 0, 2, 3)).reshape(
-                s_pad, num_weeks, 2)
-            return (full, stats) if backend == "mapreduce" else full
-        raise ValueError(f"unknown backend {backend!r}")
+        hist, stats = _local_backend_histogram(
+            log_shard, backend, s_pad, num_weeks, axis_name, hist_fn,
+            capacity_factor, max_shuffle_rounds)
+        return (hist, stats) if backend == "mapreduce" else hist
 
     spec = _log_pspec(log, axis_name)
     out_specs = (P(), _STATS_SPEC) if backend == "mapreduce" else P()
@@ -292,6 +340,117 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
 
     if backend == "mapreduce":
         _raise_if_exhausted(stats)
+    result = _finalize(hist[:num_sites], statistic)
+    return (result, stats) if return_shuffle_stats else result
+
+
+def malstone_run_generated(seed, cfg, *,
+                           mesh: Mesh,
+                           records_per_shard: int,
+                           num_sites: Optional[int] = None,
+                           statistic: str = "B",
+                           backend: str = "streams",
+                           num_weeks: int = WEEKS_PER_YEAR,
+                           axis_name="data",
+                           capacity_factor: float = 2.0,
+                           max_shuffle_rounds: Optional[int] = None,
+                           histogram_fn=None,
+                           return_shuffle_stats: bool = False):
+    """Fused MalGen phase 3 + MalStone: each device *generates* the shard
+    "its node" owns (``generate_shard_device``) and feeds it straight into
+    the backend dataflow — the global log is never materialized, on host or
+    device. Bit-identical to ``malstone_run`` over
+    ``generate_sharded_log(key, cfg, P, records_per_shard)`` when ``seed``
+    is that log's ``SeedInfo`` and the mesh has P devices on ``axis_name``.
+
+    ``seed`` comes from ``make_seed(key, cfg, P * records_per_shard)`` and
+    is closed over (its ``num_marked_events`` must stay a Python int —
+    don't pass it through ``jax.jit`` arguments). ``num_sites`` defaults to
+    ``cfg.num_sites``; the shuffle keyword arguments behave exactly as in
+    ``malstone_run``.
+    """
+    from repro.malgen.generator import generate_shard_device
+
+    parts = _axis_size(mesh, axis_name)
+    num_sites = num_sites or cfg.num_sites
+    s_pad = _pad_sites(num_sites, parts)
+    hist_fn = histogram_fn or spm_lib.site_week_histogram
+
+    def local():
+        sid = jax.lax.axis_index(axis_name)
+        shard = generate_shard_device(seed, cfg, sid, parts,
+                                      records_per_shard)
+        return _local_backend_histogram(
+            shard, backend, s_pad, num_weeks, axis_name, hist_fn,
+            capacity_factor, max_shuffle_rounds)
+
+    out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
+    fn = shard_map(local, mesh=mesh, in_specs=(), out_specs=out_specs,
+                   check_vma=False)
+    hist, stats = jax.jit(fn)()
+    if backend == "mapreduce":
+        _check_stats_or_refuse(stats, max_shuffle_rounds,
+                               return_shuffle_stats, records_per_shard,
+                               parts, capacity_factor)
+    result = _finalize(hist[:num_sites], statistic)
+    return (result, stats) if return_shuffle_stats else result
+
+
+def malstone_run_generated_streaming(seed, cfg, *,
+                                     mesh: Mesh,
+                                     records_per_shard: int,
+                                     chunk_records: int = 65_536,
+                                     num_sites: Optional[int] = None,
+                                     statistic: str = "B",
+                                     backend: str = "streams",
+                                     num_weeks: int = WEEKS_PER_YEAR,
+                                     axis_name="data",
+                                     capacity_factor: float = 2.0,
+                                     max_shuffle_rounds: Optional[int] = None,
+                                     histogram_fn=None,
+                                     return_shuffle_stats: bool = False):
+    """Streaming twin of ``malstone_run_generated``: each device generates
+    its shard in place, then folds it through the chunked ``lax.scan``
+    engine (per-chunk backend dataflow, histogram carry). Bit-identical to
+    ``malstone_run_streaming`` over the materialized
+    ``generate_sharded_log`` log at the same ``chunk_records``.
+
+    ``records_per_shard`` must divide by ``chunk_records`` (the shard-
+    layout marked stream cannot be regenerated per chunk, so unlike seed-
+    mode streaming the shard is generated once per device — peak memory
+    O(records_per_shard + marked stream), the win over the host path being
+    that generation happens on the mesh and the global log never exists).
+    """
+    from repro.core.streaming import streaming_histogram_from_log
+    from repro.malgen.generator import generate_shard_device
+
+    parts = _axis_size(mesh, axis_name)
+    num_sites = num_sites or cfg.num_sites
+    s_pad = _pad_sites(num_sites, parts)
+    if records_per_shard % chunk_records != 0:
+        raise ValueError(
+            f"records_per_shard ({records_per_shard}) must be divisible by "
+            f"chunk_records ({chunk_records}) on the fused generated path "
+            f"(no padding rows are generated)")
+
+    def local():
+        sid = jax.lax.axis_index(axis_name)
+        shard = generate_shard_device(seed, cfg, sid, parts,
+                                      records_per_shard)
+        return streaming_histogram_from_log(
+            shard, s_pad, chunk_records=chunk_records, num_weeks=num_weeks,
+            axis_name=axis_name, backend=backend, histogram_fn=histogram_fn,
+            capacity_factor=capacity_factor, max_rounds=max_shuffle_rounds)
+
+    out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
+    fn = shard_map(local, mesh=mesh, in_specs=(), out_specs=out_specs,
+                   check_vma=False)
+    hist, stats = jax.jit(fn)()
+    if backend == "mapreduce":
+        # per-chunk shuffle: the capacity/round bound is set by chunk size
+        _check_stats_or_refuse(stats, max_shuffle_rounds,
+                               return_shuffle_stats, chunk_records, parts,
+                               capacity_factor)
     result = _finalize(hist[:num_sites], statistic)
     return (result, stats) if return_shuffle_stats else result
 
@@ -420,6 +579,9 @@ def pad_log_to(log: EventLog, target: int) -> EventLog:
         timestamp=padcol(log.timestamp),
         mark=padcol(log.mark),
         event_seq=None if log.event_seq is None else padcol(log.event_seq),
-        shard_hash=None if log.shard_hash is None else padcol(log.shard_hash),
+        # sentinel, not 0: a zero fill gave padding rows the Event IDs
+        # (0, 0..pad) which collided with any real shard hashing to 0
+        shard_hash=None if log.shard_hash is None
+        else padcol(log.shard_hash, fill=PAD_SHARD_HASH),
         valid=jnp.concatenate([valid, jnp.zeros((pad,), bool)]),
     )

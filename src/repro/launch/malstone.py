@@ -69,6 +69,13 @@ def main():
     ap.add_argument("--stream-chunks", type=int, default=0, metavar="N",
                     help="stream each node's records in N regenerated chunks"
                          " (0 = one-shot materialized log)")
+    ap.add_argument("--gen-device", action="store_true",
+                    help="device-parallel MalGen: each node generates its "
+                         "own shard on its device (generate_shard_device) "
+                         "and the statistic runs fused on the generated "
+                         "records — the global log is never materialized "
+                         "on host. The timed run includes generation. "
+                         "Default (host) path stays the bit-exact oracle")
     ap.add_argument("--bench-json", default=None, metavar="PATH",
                     help="also write this run as a BENCH_*.json document "
                          "(schema: repro/bench/schema.py) for "
@@ -90,6 +97,41 @@ def main():
         if args.records_per_node % args.stream_chunks:
             ap.error("--stream-chunks must divide --records-per-node")
         chunk = args.records_per_node // args.stream_chunks
+
+    if args.gen_device:
+        from repro.core import (
+            malstone_run_generated,
+            malstone_run_generated_streaming,
+        )
+        from repro.malgen import make_seed
+
+        mode = (f"fused + stream x{args.stream_chunks}" if args.stream_chunks
+                else "fused")
+        print(f"MalGen (device, {mode}): {total:,} records "
+              f"({total * 100 / 1e6:.0f} MB logical) generated in place on "
+              f"{args.nodes} nodes — global log never materialized on host")
+        t0 = time.perf_counter()
+        seed = make_seed(jax.random.key(0), cfg, total)
+        jax.block_until_ready(seed.entity_mark_time)
+        print(f"  seeded in {time.perf_counter() - t0:.1f}s "
+              f"(scatter payload {seed.seed_bytes / 1e6:.1f} MB)")
+
+        def run_generated():
+            # seed is closed over, not a jit argument: its static
+            # num_marked_events defines the per-shard layout
+            kw = dict(mesh=mesh, records_per_shard=args.records_per_node,
+                      statistic=args.statistic, backend=args.backend,
+                      return_shuffle_stats=want_stats, **shuffle_kw)
+            if args.stream_chunks:
+                out = malstone_run_generated_streaming(
+                    seed, cfg, chunk_records=chunk, **kw)
+            else:
+                out = malstone_run_generated(seed, cfg, **kw)
+            return (out[0].rho, out[1]) if want_stats else out.rho
+
+        fn = jax.jit(run_generated)
+        run_args = ()
+    elif args.stream_chunks:
         num_chunks = args.nodes * args.stream_chunks
         print(f"MalGen (streaming): {total:,} records "
               f"({total * 100 / 1e6:.0f} MB logical) over {args.nodes} nodes"
@@ -140,6 +182,8 @@ def main():
             f"  run {r + 1}: {us / 1e3:.1f} ms "
             f"({total / (us / 1e6) / 1e6:.1f}M records/s)", flush=True))
     mode = f"stream x{args.stream_chunks}" if args.stream_chunks else "one-shot"
+    if args.gen_device:
+        mode = f"gen-device {mode}" if args.stream_chunks else "gen-device"
     print(f"MalStone {args.statistic} [{args.backend}, {mode}] "
           f"median {timing.us_per_call / 1e3:.1f} ms over {args.runs} runs")
 
@@ -167,13 +211,16 @@ def main():
         engine = "streaming" if args.stream_chunks else "oneshot"
         stat_slug = args.statistic.lower().replace("-", "")
         scenario = f"launch_malstone_{stat_slug}_{args.backend}_{engine}"
+        if args.gen_device:
+            scenario += "_gendev"
         doc = schema.new_document(
             pathlib.Path(args.bench_json).stem.removeprefix("BENCH_"),
             env={"source": "repro.launch.malstone"})
         schema.add_result(
             doc, scenario,
             {"backend": args.backend, "statistic": args.statistic,
-             "engine": engine, "nodes": args.nodes,
+             "engine": engine, "gen_device": args.gen_device,
+             "nodes": args.nodes,
              "records_per_node": args.records_per_node,
              "sites": args.sites, "entities": args.entities,
              "stream_chunks": args.stream_chunks,

@@ -24,12 +24,15 @@ from repro.malgen.seeding import (
     make_seed_streaming,
 )
 from repro.malgen.generator import (
+    chunk_shard_hash,
     generate_chunk,
     generate_chunked_log,
     generate_full_log,
     generate_shard,
+    generate_shard_device,
     generate_sharded_log,
     generate_streaming_log,
+    shard_marked_budget,
 )
 from repro.malgen.records import encode_records, decode_records, RECORD_BYTES
 
@@ -42,12 +45,15 @@ __all__ = [
     "chunk_marked_records",
     "make_seed",
     "make_seed_streaming",
+    "chunk_shard_hash",
     "generate_chunk",
     "generate_chunked_log",
     "generate_full_log",
     "generate_shard",
+    "generate_shard_device",
     "generate_sharded_log",
     "generate_streaming_log",
+    "shard_marked_budget",
     "encode_records",
     "decode_records",
     "RECORD_BYTES",

@@ -180,6 +180,24 @@ class TestRegistry:
         assert {"malgen_seed", "malgen_generate",
                 "malgen_encode"} <= set(registry.SCENARIOS)
 
+    def test_gen_device_scenarios_present(self):
+        assert {"malgen_generate_host_sharded", "malgen_generate_device",
+                "e2e_fused_oneshot", "e2e_fused_streaming",
+                "e2e_materialized_oneshot",
+                "sweep_gen_device_p2"} <= set(registry.SCENARIOS)
+        # the smoke preset (CI perf gate) exercises the device-MalGen path
+        smoke = registry.preset_scenario_names("smoke")
+        assert "malgen_generate_device" in smoke
+        assert "e2e_fused_oneshot" in smoke
+
+    def test_gen_device_scenarios_callable_at_tiny_scale(self, tiny_ctx):
+        for name in ("malgen_generate_device", "malgen_generate_host_sharded",
+                     "e2e_fused_oneshot", "e2e_fused_streaming",
+                     "e2e_materialized_oneshot"):
+            res = registry.SCENARIOS[name].run(TINY, tiny_ctx)
+            assert res.timing.us_per_call > 0, name
+            assert res.records == TINY.records_per_node  # nodes=1
+
     def test_smoke_preset_covers_backends_and_engines(self):
         names = registry.preset_scenario_names("smoke")
         for backend in registry.BACKENDS:

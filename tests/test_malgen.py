@@ -2,6 +2,7 @@
 
 import jax
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.common.types import (
@@ -139,6 +140,23 @@ class TestGeneration:
         hsh = np.asarray(log.shard_hash)
         pairs = set(zip(hsh.tolist(), seq.tolist()))
         assert len(pairs) == log.num_records  # globally unique event ids
+
+    def test_marked_overflow_raises_not_truncates(self):
+        """Regression: a seed built for a bigger log than the shard layout
+        describes used to silently drop marked events
+        (min(n_marked_local, records_per_shard)); now it must raise with
+        the offending shard id and counts."""
+        seed = make_seed(jax.random.key(7), CFG, total_records=20_000)
+        n_local = len(range(0, seed.num_marked_events, 2))
+        assert n_local > 256  # the layout below cannot hold the slice
+        with pytest.raises(ValueError, match=r"shard 0.*marked events"):
+            generate_shard(seed, CFG, 0, 2, 256)
+        # the losslessness claim behind the raise: a layout that *can* hold
+        # every marked event emits all of them (nothing clamped)
+        ok = generate_shard(seed, CFG, 0, 2, n_local)
+        marked_mask = np.asarray(seed.marked_mask)
+        emitted = int(marked_mask[np.asarray(ok.site_id)].sum())
+        assert emitted == n_local
 
 
 class TestRecordCodec:
