@@ -173,6 +173,7 @@ def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
                   nodes: Optional[int] = None,
                   records_per_node: Optional[int] = None,
                   capacity_factor: float = 2.0,
+                  packed: Optional[bool] = None,
                   collect_shuffle_stats: bool = False) -> ScenarioResult:
     """One timed grid point. With ``collect_shuffle_stats`` the jitted fn
     returns (rho, ShuffleStats) so ``time_callable``'s output carries the
@@ -195,6 +196,7 @@ def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
         fn = jax.jit(lambda l: shape_out(malstone_run(
             l, cfg.num_sites, mesh=mesh, statistic=statistic,
             backend=backend, capacity_factor=capacity_factor,
+            packed_shuffle=packed,
             return_shuffle_stats=collect_shuffle_stats)))
     elif engine == "streaming":
         seed, num_chunks = ctx.seed(scale, nodes)
@@ -203,6 +205,7 @@ def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
             s, cfg.num_sites, mesh=mesh, statistic=statistic,
             backend=backend, chunk_records=scale.chunk_records, cfg=cfg,
             num_chunks=num_chunks, capacity_factor=capacity_factor,
+            packed_shuffle=packed,
             return_shuffle_stats=collect_shuffle_stats)))
         total = num_chunks * scale.chunk_records
     else:
@@ -217,7 +220,8 @@ def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
                    "shuffle_rounds": int(stats.rounds),
                    "shuffle_capacity": int(stats.capacity),
                    "shuffle_deferred": int(stats.residual),
-                   "shuffle_overflow": int(stats.overflow)}
+                   "shuffle_overflow": int(stats.overflow),
+                   "shuffle_bytes_exchanged": int(stats.bytes_exchanged)}
     return ScenarioResult(timing=timing, records=total, derived=derived,
                           effective={"nodes": nodes,
                                      "records_per_node": rpn})
@@ -252,11 +256,16 @@ def _cf_slug(cf: float) -> str:
 
 
 def _run_mapreduce_lossless(scale: Scale, ctx: BenchContext, *, cf: float,
-                            engine: str = "oneshot") -> ScenarioResult:
+                            engine: str = "oneshot",
+                            packed: bool = False) -> ScenarioResult:
+    """One shuffle-sweep point. ``packed`` is explicit (never auto) so the
+    ``mapreduce_lossless_*`` rows stay the 4-column baseline the
+    ``mapreduce_packed_*`` rows are compared against."""
     from repro.core import ShuffleExhaustedError
     res = _run_malstone(scale, ctx, backend="mapreduce", statistic="B",
-                        engine=engine, capacity_factor=cf,
+                        engine=engine, capacity_factor=cf, packed=packed,
                         collect_shuffle_stats=True)
+    res.derived["shuffle_packed"] = packed
     overflow = res.derived["shuffle_overflow"]
     if overflow != 0:
         # the sweep's whole claim is losslessness — never record timings
@@ -272,16 +281,36 @@ def _run_mapreduce_lossless(scale: Scale, ctx: BenchContext, *, cf: float,
 for _cf in LOSSLESS_CAPACITY_FACTORS:
     @_register(f"mapreduce_lossless_{_cf_slug(_cf)}", "lossless",
                {"backend": "mapreduce", "statistic": "B",
-                "engine": "oneshot", "capacity_factor": _cf})
+                "engine": "oneshot", "capacity_factor": _cf,
+                "packed": False})
     def _scenario_lossless(scale, ctx, *, _c=_cf):
         return _run_mapreduce_lossless(scale, ctx, cf=_c)
 
 
 @_register("mapreduce_lossless_streaming_cf0p5", "lossless",
            {"backend": "mapreduce", "statistic": "B",
-            "engine": "streaming", "capacity_factor": 0.5})
+            "engine": "streaming", "capacity_factor": 0.5,
+            "packed": False})
 def _scenario_lossless_streaming(scale, ctx):
     return _run_mapreduce_lossless(scale, ctx, cf=0.5, engine="streaming")
+
+
+# Packed sort-once twins of the lossless sweep: same statistic, same
+# losslessness assertion, but the mapper projects each record to one
+# uint32 word and sorts once before the round loop. The paired
+# ``mapreduce_lossless_cf{0p5,1}`` rows (4-column exchange, explicit
+# ``packed=False``) are the baseline: the delta IS the tentpole claim —
+# ~4x fewer shuffled bytes (``shuffle_bytes_exchanged`` in derived) and
+# the per-round argsort hoisted out of the loop.
+PACKED_CAPACITY_FACTORS = (0.5, 1.0)
+
+for _cf in PACKED_CAPACITY_FACTORS:
+    @_register(f"mapreduce_packed_{_cf_slug(_cf)}", "lossless",
+               {"backend": "mapreduce", "statistic": "B",
+                "engine": "oneshot", "capacity_factor": _cf,
+                "packed": True})
+    def _scenario_packed(scale, ctx, *, _c=_cf):
+        return _run_mapreduce_lossless(scale, ctx, cf=_c, packed=True)
 
 
 # ------------------------------------------------------------- kernel paths
@@ -588,9 +617,11 @@ def preset_scenario_names(preset: str) -> list:
             if sc.group == "sweep" and sc.params.get("multiplier") == 4:
                 continue
             if (sc.group == "lossless"
-                    and name != "mapreduce_lossless_cf0p25"):
-                # one multi-round point keeps the perf gate on the
-                # residual-shuffle code path without running the full sweep
+                    and name not in ("mapreduce_lossless_cf0p25",
+                                     "mapreduce_packed_cf0p5")):
+                # one multi-round unpacked point + one packed point keep
+                # the perf gate on both shuffle code paths without running
+                # the full sweep
                 continue
         names.append(name)
     return names

@@ -10,31 +10,69 @@ TPU adaptation: the shuffle is a **multi-round** fixed-capacity bucketed
 ``lax.all_to_all``. TPU collectives need static shapes, so each device packs
 its records into ``[P, capacity]`` buckets (dest = site_id % P, the paper's
 Partitioner) and exchanges them; records that do not fit their bucket are
-*not dropped* — they stay in a same-shape residual buffer and a
-``lax.while_loop`` re-packs and re-exchanges them until the psum'd global
-leftover count reaches zero. The shuffle is therefore exact at **any**
-``capacity_factor``: the paper's MapReduce ships every record to its
-reducer, and so do we — a small capacity just pays for it in extra rounds
-(the measured rounds-vs-capacity tradeoff is the ``mapreduce_lossless_*``
-bench scenarios). Rounds are bounded statically: a device holds at most
-``n`` records for any one destination and each round drains ``capacity`` of
-them, so ``ceil(n / capacity)`` rounds always suffice; ``max_rounds=None``
-uses exactly that bound, making the loop provably lossless. An explicit
-smaller ``max_rounds`` is an escape hatch for bounding worst-case latency —
-the runner raises ``ShuffleExhaustedError`` if it is exhausted with records
+*not dropped* — they stay behind and a ``lax.while_loop`` re-exchanges them
+until the psum'd global leftover count reaches zero. The shuffle is
+therefore exact at **any** ``capacity_factor``: the paper's MapReduce ships
+every record to its reducer, and so do we — a small capacity just pays for
+it in extra rounds (the measured rounds-vs-capacity tradeoff is the
+``mapreduce_lossless_*`` / ``mapreduce_packed_*`` bench scenarios). Rounds
+are bounded statically: a device holds at most ``n`` records for any one
+destination and each round drains ``capacity`` of them, so
+``ceil(n / capacity)`` rounds always suffice; ``max_rounds=None`` uses
+exactly that bound, making the loop provably lossless. An explicit smaller
+``max_rounds`` is an escape hatch for bounding worst-case latency — the
+runner raises ``ShuffleExhaustedError`` if it is exhausted with records
 still undelivered (never a silent drop).
+
+Two exchange implementations share that loop:
+
+- **packed sort-once** (the default whenever the fields fit —
+  ``num_sites <= 2^24`` and ``num_weeks <= 64``): the Reducer only ever
+  needs ``(site, week, mark, valid)``, so the mapper projects each record
+  into ONE uint32 word (``repro.common.types.pack_site_week_mark``) and
+  stable-sorts the words by destination ONCE before the loop. Each round
+  then just gathers the next ``capacity``-wide window per destination from
+  the already-sorted array (the residual stays sorted by construction): no
+  per-round argsort, no per-round residual re-materialization, and the
+  ``all_to_all`` carries 4 bytes per bucket slot instead of 17.
+- **4-column fallback** (``_pack_buckets``): the original path — per-round
+  stable argsort + scatter of all four record columns plus validity, kept
+  for field ranges the packed word cannot represent and as the bit-identity
+  oracle (tests assert the two paths produce identical histograms AND
+  identical ``sent``/``rounds``/``residual``/``overflow`` accounting).
+
+``ShuffleStats.bytes_exchanged`` makes the paper's defining cost — bytes
+crossing the network — a first-class measured quantity: per-device bucket
+bytes shipped through ``all_to_all`` summed over rounds (int32 with x64
+off — saturating at the 2 GB horizon with a warning, never wrapping;
+enable ``jax_enable_x64`` for exact int64 accounting at paper-scale
+classes).
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.compat import axis_size
-from repro.common.types import EventLog, WEEKS_PER_YEAR
+from repro.common.types import (
+    EventLog,
+    PACK_MAX_SITES,
+    PACK_MAX_WEEKS,
+    SECONDS_PER_WEEK,
+    WEEKS_PER_YEAR,
+    pack_site_week_mark,
+    unpack_site_week_mark,
+)
 from repro.core.spm import site_week_histogram
+
+# Bytes one bucket slot occupies on the wire per shuffle round.
+PACKED_SLOT_BYTES = 4        # one uint32 word
+UNPACKED_SLOT_BYTES = 17     # four int32 columns + one bool validity column
 
 
 class ShuffleExhaustedError(RuntimeError):
@@ -54,17 +92,34 @@ class ShuffleStats(NamedTuple):
       streaming engine reports the max over chunks);
     - ``residual``: total deferred-record re-packs — the sum over rounds of
       records pushed to the next round (a record deferred k times counts k
-      times), i.e. how much re-shuffle pressure the capacity caused.
+      times), i.e. how much re-shuffle pressure the capacity caused;
+    - ``bytes_exchanged``: bucket-buffer bytes this device shipped through
+      ``all_to_all``, summed over rounds (``rounds x P x capacity x
+      bytes-per-slot`` — the fixed-capacity buffers cross the network
+      whole, empty slots included). The paper's defining MapReduce cost
+      (§6.1) as a measured number; the packed word is 4 bytes/slot vs 17
+      for the 4-column fallback. int32 with x64 off (saturates with a
+      warning past 2 GB/device instead of wrapping), int64 with x64 on.
 
     ``_pack_buckets`` fills the same tuple for its single round
-    (``rounds=1``, ``residual == overflow`` = this round's leftover).
+    (``rounds=1``, ``residual == overflow`` = this round's leftover,
+    ``bytes_exchanged = 0`` — the exchange, and thus byte accounting,
+    happens in ``mapreduce_histogram``).
+
+    The trailing-field defaults are ``np.int32`` scalars, NOT Python ints:
+    a Python int default is weakly typed inside jit, so ``shuffle_stats``'s
+    psums would rely on implicit weak-type promotion (and a uint32 consumer
+    would see the value silently change dtype). numpy scalars carry a
+    concrete int32 dtype without initializing a jax backend at import time
+    (``tests/test_packed_shuffle.py`` regression-tests this contract).
     """
 
     sent: jnp.ndarray
     overflow: jnp.ndarray
     capacity: jnp.ndarray
-    rounds: jnp.ndarray = 1
-    residual: jnp.ndarray = 0
+    rounds: jnp.ndarray = np.int32(1)
+    residual: jnp.ndarray = np.int32(0)
+    bytes_exchanged: jnp.ndarray = np.int32(0)
 
 
 def _pack_buckets(log: EventLog, num_partitions: int, capacity: int):
@@ -109,8 +164,9 @@ def _pack_buckets(log: EventLog, num_partitions: int, capacity: int):
         valid=leftover)
     overflow = jnp.sum(leftover)
     sent = jnp.sum(keep)
-    stats = ShuffleStats(sent=sent, overflow=overflow, capacity=capacity,
-                         rounds=1, residual=overflow)
+    stats = ShuffleStats(sent=sent, overflow=overflow,
+                         capacity=jnp.int32(capacity),
+                         rounds=np.int32(1), residual=overflow)
     return (site, entity, ts, mark, vmask), residual, stats
 
 
@@ -129,6 +185,29 @@ def shuffle_round_bound(num_records: int, capacity: int) -> int:
     return max(1, -(-num_records // capacity))
 
 
+def packed_shuffle_supported(num_sites: int, num_weeks: int) -> bool:
+    """Whether the one-word record projection can represent this workload
+    (site in 24 bits, week in 6 — see ``repro.common.types``)."""
+    return num_sites <= PACK_MAX_SITES and num_weeks <= PACK_MAX_WEEKS
+
+
+def resolve_packed_shuffle(packed: Optional[bool], num_sites: int,
+                           num_weeks: int) -> bool:
+    """Static pack-vs-fallback decision. ``None`` = auto (pack whenever the
+    fields fit); an explicit ``True`` for an unrepresentable workload is an
+    error, never a silent fallback."""
+    supported = packed_shuffle_supported(num_sites, num_weeks)
+    if packed is None:
+        return supported
+    if packed and not supported:
+        raise ValueError(
+            f"packed shuffle requested but the one-word projection cannot "
+            f"represent num_sites={num_sites} (max {PACK_MAX_SITES}) / "
+            f"num_weeks={num_weeks} (max {PACK_MAX_WEEKS}); pass "
+            f"packed=None for the automatic 4-column fallback")
+    return bool(packed)
+
+
 def mapreduce_histogram(log: EventLog,
                         num_sites: int,
                         num_weeks: int = WEEKS_PER_YEAR,
@@ -136,6 +215,7 @@ def mapreduce_histogram(log: EventLog,
                         capacity_factor: float = 2.0,
                         histogram_fn=site_week_histogram,
                         max_rounds: Optional[int] = None,
+                        packed: Optional[bool] = None,
                         ) -> tuple[jnp.ndarray, ShuffleStats]:
     """Multi-round lossless shuffle + reduce. Returns (owned hist, stats).
 
@@ -152,16 +232,79 @@ def mapreduce_histogram(log: EventLog,
     bounds latency but may stop with ``stats.overflow > 0`` — callers that
     thread it must check (``repro.core.runner`` raises
     ``ShuffleExhaustedError``).
+
+    ``packed`` selects the exchange implementation (module docstring):
+    ``None`` = auto — the packed sort-once path whenever
+    ``num_sites <= 2^24`` and ``num_weeks <= 64``, else the 4-column
+    fallback; ``True`` / ``False`` force one (forcing packed on an
+    unrepresentable workload raises ``ValueError``). Both paths produce
+    bit-identical histograms and identical stats semantics; only
+    ``bytes_exchanged`` (and wall time) differ.
     """
     p = axis_size(axis_name)
     n = log.num_records
     capacity = static_capacity(n, p, capacity_factor)
-    bound = shuffle_round_bound(n, capacity)
     if max_rounds is None:
-        max_rounds = bound
+        max_rounds = shuffle_round_bound(n, capacity)
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+    impl = (_packed_shuffle_histogram
+            if resolve_packed_shuffle(packed, num_sites, num_weeks)
+            else _unpacked_shuffle_histogram)
+    return impl(log, num_sites, num_weeks, axis_name, capacity,
+                histogram_fn, max_rounds)
 
+
+def _shuffle_loop(body, carry0, *, capacity: int,
+                  num_partitions: int, slot_bytes: int, max_rounds: int):
+    """Shared while-loop skeleton: both exchange implementations carry
+    ``(rounds, global_left, hist, <impl state...>, sent, deferred)`` and
+    stop when the psum'd global leftover reaches zero or ``max_rounds`` is
+    exhausted. Returns the final carry plus the per-device
+    ``bytes_exchanged`` total (one full ``[P, capacity]`` buffer per slot
+    column per round)."""
+
+    def cond(carry):
+        rounds, global_left = carry[0], carry[1]
+        return (global_left > 0) & (rounds < max_rounds)
+
+    out = jax.lax.while_loop(cond, body, carry0)
+    rounds = out[0]
+    # Byte accounting in the widest integer the session allows: with x64
+    # off the counter is int32, whose per-device horizon (2 GB shipped) is
+    # reachable at paper-scale classes — saturate the static per-round term
+    # (never crash the trace or wrap silently) and tell the caller how to
+    # get exact numbers. The psum across devices can still wrap int32 at
+    # extreme scale; enabling x64 widens the whole chain.
+    dtype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    limit = int(jnp.iinfo(dtype).max)
+    per_round = num_partitions * capacity * slot_bytes
+    if per_round * max_rounds > limit:
+        warnings.warn(
+            f"ShuffleStats.bytes_exchanged may exceed {dtype.__name__} "
+            f"({per_round} B/round x up to {max_rounds} rounds); the value "
+            f"saturates instead of wrapping — enable jax_enable_x64 for "
+            f"exact byte accounting at this scale")
+    per_round_c = min(per_round, limit)
+    # first round count whose exact byte total would exceed the dtype —
+    # select the saturation value there so the (wrapping) product below
+    # it is only ever used where it is exact
+    sat_from = limit // per_round_c + 1
+    bytes_exchanged = jnp.where(
+        rounds >= sat_from, jnp.asarray(limit, dtype),
+        rounds.astype(dtype) * jnp.asarray(per_round_c, dtype))
+    return out, bytes_exchanged
+
+
+def _unpacked_shuffle_histogram(log: EventLog, num_sites: int,
+                                num_weeks: int, axis_name: str,
+                                capacity: int, histogram_fn,
+                                max_rounds: int):
+    """The 4-column fallback: per-round stable argsort + bucket scatter of
+    all record columns (``_pack_buckets``), residual records re-packed as a
+    same-shape ``EventLog`` each round. Kept as the oracle for the packed
+    path and for field ranges the packed word cannot represent."""
+    p = axis_size(axis_name)
     my = jax.lax.axis_index(axis_name)
     s_local = num_sites // p
 
@@ -205,18 +348,16 @@ def mapreduce_histogram(log: EventLog,
                 sent + rstats.sent,
                 deferred + rstats.overflow)
 
-    def cond(carry):
-        rounds, global_left = carry[0], carry[1]
-        return (global_left > 0) & (rounds < max_rounds)
-
     carry0 = (jnp.int32(0),
               jax.lax.psum(jnp.sum(pending0.valid), axis_name),
               jnp.zeros((s_local, num_weeks, 2), jnp.int32),
               pending0,
               jnp.int32(0),
               jnp.int32(0))
-    rounds, _, hist, pending, sent, deferred = jax.lax.while_loop(
-        cond, body, carry0)
+    carry, bytes_exchanged = _shuffle_loop(
+        body, carry0, capacity=capacity, num_partitions=p,
+        slot_bytes=UNPACKED_SLOT_BYTES, max_rounds=max_rounds)
+    rounds, _, hist, pending, sent, deferred = carry
 
     stats = ShuffleStats(
         sent=sent,
@@ -224,6 +365,86 @@ def mapreduce_histogram(log: EventLog,
         capacity=jnp.int32(capacity),
         rounds=rounds,
         residual=deferred,
+        bytes_exchanged=bytes_exchanged,
+    )
+    return hist, stats
+
+
+def _packed_shuffle_histogram(log: EventLog, num_sites: int,
+                              num_weeks: int, axis_name: str,
+                              capacity: int, histogram_fn,
+                              max_rounds: int):
+    """Packed sort-once exchange (module docstring): project every record
+    to one uint32 word, stable-sort the words by destination ONCE, then
+    each round gathers the next ``capacity``-wide window per destination
+    from the sorted array. The residual of round ``r`` is exactly the
+    sorted suffix past offset ``(r+1) * capacity`` of each destination
+    segment — sorted by construction, so no per-round argsort and no
+    residual buffer at all; the loop carries only scalar counters and the
+    histogram."""
+    p = axis_size(axis_name)
+    n = log.num_records
+    my = jax.lax.axis_index(axis_name)
+    s_local = num_sites // p
+
+    valid = log.valid_mask()
+    # Mapper-side projection: week is bucketed BEFORE the exchange (the
+    # Reducer's own bucketing function, so the round-trip is exact) and the
+    # four reducer-relevant fields become one word. Invalid rows sort to a
+    # trailing pseudo-destination and pack to the all-zero word.
+    dest = jnp.where(valid, (log.site_id % p).astype(jnp.int32), p)
+    words = pack_site_week_mark(log.site_id, log.week(num_weeks=num_weeks),
+                                log.mark, valid)
+
+    order = jnp.argsort(dest, stable=True)          # THE sort — once
+    words_sorted = words[order]
+    starts = jnp.searchsorted(dest[order], jnp.arange(p + 1))
+    counts = starts[1:] - starts[:-1]               # valid records per dest
+    lane = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+
+    def body(carry):
+        r, _, hist, sent, deferred = carry
+        # Round r ships window [r*C, (r+1)*C) of every destination segment.
+        idx = (starts[:-1] + r * capacity)[:, None] + lane       # [P, C]
+        live = idx < starts[1:][:, None]
+        buf = jnp.where(live, jnp.take(words_sorted, idx, mode="clip"),
+                        jnp.uint32(0))
+        shipped = jax.lax.all_to_all(buf, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True)
+        site, week, mark, ok = unpack_site_week_mark(shipped.reshape(-1))
+        # Re-base strided site ids to local dense rows (site % P == my by
+        # construction; guard anyway) and rebuild a minimal EventLog so any
+        # histogram_fn (incl. the Pallas kernel) reduces it unchanged —
+        # week * SECONDS_PER_WEEK re-buckets to exactly ``week``.
+        ok = ok & ((site % p) == my)
+        rebased = EventLog(site_id=site // p, entity_id=jnp.zeros_like(site),
+                           timestamp=week * SECONDS_PER_WEEK, mark=mark,
+                           valid=ok)
+        left = jnp.sum(jnp.maximum(counts - (r + 1) * capacity, 0))
+        return (r + 1,
+                jax.lax.psum(left, axis_name),
+                hist + histogram_fn(rebased, s_local, num_weeks),
+                sent + jnp.sum(live),
+                deferred + left)
+
+    carry0 = (jnp.int32(0),
+              jax.lax.psum(starts[p], axis_name),   # global valid count
+              jnp.zeros((s_local, num_weeks, 2), jnp.int32),
+              jnp.int32(0),
+              jnp.int32(0))
+    carry, bytes_exchanged = _shuffle_loop(
+        body, carry0, capacity=capacity, num_partitions=p,
+        slot_bytes=PACKED_SLOT_BYTES, max_rounds=max_rounds)
+    rounds, _, hist, sent, deferred = carry
+
+    stats = ShuffleStats(
+        sent=sent,
+        # undelivered after the loop: the sorted suffix past rounds*C
+        overflow=jnp.sum(jnp.maximum(counts - rounds * capacity, 0)),
+        capacity=jnp.int32(capacity),
+        rounds=rounds,
+        residual=deferred,
+        bytes_exchanged=bytes_exchanged,
     )
     return hist, stats
 
@@ -237,6 +458,7 @@ def shuffle_stats(stats: ShuffleStats, axis_name: str = "data") -> ShuffleStats:
         capacity=stats.capacity,
         rounds=stats.rounds,
         residual=jax.lax.psum(stats.residual, axis_name),
+        bytes_exchanged=jax.lax.psum(stats.bytes_exchanged, axis_name),
     )
 
 

@@ -34,7 +34,7 @@ from repro.core.backends import (
 )
 from repro.core.backends.mapreduce import mapreduce_combiner_histogram
 
-_STATS_SPEC = ShuffleStats(P(), P(), P(), P(), P())
+_STATS_SPEC = ShuffleStats(P(), P(), P(), P(), P(), P())
 
 
 def _raise_if_exhausted(stats: Optional[ShuffleStats]) -> None:
@@ -139,7 +139,8 @@ def _axis_size(mesh: Mesh, axis_name) -> int:
 def _local_backend_histogram(log_shard: EventLog, backend: str, s_pad: int,
                              num_weeks: int, axis_name, hist_fn,
                              capacity_factor: float,
-                             max_shuffle_rounds: Optional[int]):
+                             max_shuffle_rounds: Optional[int],
+                             packed_shuffle: Optional[bool] = None):
     """One device's backend dataflow -> (replicated full-site histogram,
     ShuffleStats or None). Runs INSIDE ``shard_map``; shared by the
     materialized (``malstone_run``) and fused-generation
@@ -160,7 +161,7 @@ def _local_backend_histogram(log_shard: EventLog, backend: str, s_pad: int,
             owned, stats = mapreduce_histogram(
                 log_shard, s_pad, num_weeks, axis_name,
                 capacity_factor=capacity_factor, histogram_fn=hist_fn,
-                max_rounds=max_shuffle_rounds)
+                max_rounds=max_shuffle_rounds, packed=packed_shuffle)
             stats = shuffle_stats(stats, axis_name)
         else:
             owned = mapreduce_combiner_histogram(
@@ -195,6 +196,7 @@ def malstone_run(log: EventLog,
                  axis_name="data",
                  capacity_factor: float = 2.0,
                  max_shuffle_rounds: Optional[int] = None,
+                 packed_shuffle: Optional[bool] = None,
                  histogram_fn=None,
                  donate_log: bool = False,
                  return_shuffle_stats: bool = False):
@@ -213,7 +215,13 @@ def malstone_run(log: EventLog,
     call is traced under an outer ``jax.jit`` — where that post-run check
     cannot fire — an under-bound cap is refused at trace time unless
     ``return_shuffle_stats=True`` puts the overflow counter in the
-    caller's hands). With
+    caller's hands). ``packed_shuffle`` selects the shuffle's exchange
+    implementation: ``None`` (auto, the default) uses the one-word packed
+    sort-once path whenever the padded site count fits in 24 bits and
+    ``num_weeks <= 64``, ``False`` forces the 4-column fallback, ``True``
+    demands packing (``ValueError`` if a field would not fit) — both are
+    bit-identical; only ``stats.bytes_exchanged`` and wall time differ
+    (see ``backends/mapreduce.py``). With
     ``donate_log=True`` the log's buffers are donated to the computation
     (``jax.jit(..., donate_argnums=0)``) — the caller must not reuse the
     log afterwards on backends that honor donation (CPU ignores it with a
@@ -228,7 +236,7 @@ def malstone_run(log: EventLog,
     def local(log_shard: EventLog):
         hist, stats = _local_backend_histogram(
             log_shard, backend, s_pad, num_weeks, axis_name, hist_fn,
-            capacity_factor, max_shuffle_rounds)
+            capacity_factor, max_shuffle_rounds, packed_shuffle)
         return (hist, stats) if backend == "mapreduce" else hist
 
     spec = _log_pspec(log, axis_name)
@@ -260,6 +268,7 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
                            axis_name="data",
                            capacity_factor: float = 2.0,
                            max_shuffle_rounds: Optional[int] = None,
+                           packed_shuffle: Optional[bool] = None,
                            histogram_fn=None,
                            return_shuffle_stats: bool = False):
     """Streaming chunked MalStone: ``lax.scan`` over fixed-size record
@@ -315,7 +324,7 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
                 chunk_records=chunk_records, num_weeks=num_weeks,
                 axis_name=axis_name, backend=backend,
                 histogram_fn=histogram_fn, capacity_factor=capacity_factor,
-                max_rounds=max_shuffle_rounds)
+                max_rounds=max_shuffle_rounds, packed=packed_shuffle)
 
         fn = shard_map(run_gen, mesh=mesh, in_specs=(), out_specs=out_specs,
                        check_vma=False)
@@ -331,7 +340,7 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
                 log_shard, s_pad, chunk_records=chunk_records,
                 num_weeks=num_weeks, axis_name=axis_name, backend=backend,
                 histogram_fn=histogram_fn, capacity_factor=capacity_factor,
-                max_rounds=max_shuffle_rounds)
+                max_rounds=max_shuffle_rounds, packed=packed_shuffle)
 
         spec = _log_pspec(log, axis_name)
         fn = shard_map(run_log, mesh=mesh, in_specs=(spec,),
@@ -354,6 +363,7 @@ def malstone_run_generated(seed, cfg, *,
                            axis_name="data",
                            capacity_factor: float = 2.0,
                            max_shuffle_rounds: Optional[int] = None,
+                           packed_shuffle: Optional[bool] = None,
                            histogram_fn=None,
                            return_shuffle_stats: bool = False):
     """Fused MalGen phase 3 + MalStone: each device *generates* the shard
@@ -382,7 +392,7 @@ def malstone_run_generated(seed, cfg, *,
                                       records_per_shard)
         return _local_backend_histogram(
             shard, backend, s_pad, num_weeks, axis_name, hist_fn,
-            capacity_factor, max_shuffle_rounds)
+            capacity_factor, max_shuffle_rounds, packed_shuffle)
 
     out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
     fn = shard_map(local, mesh=mesh, in_specs=(), out_specs=out_specs,
@@ -407,6 +417,7 @@ def malstone_run_generated_streaming(seed, cfg, *,
                                      axis_name="data",
                                      capacity_factor: float = 2.0,
                                      max_shuffle_rounds: Optional[int] = None,
+                                     packed_shuffle: Optional[bool] = None,
                                      histogram_fn=None,
                                      return_shuffle_stats: bool = False):
     """Streaming twin of ``malstone_run_generated``: each device generates
@@ -440,7 +451,8 @@ def malstone_run_generated_streaming(seed, cfg, *,
         return streaming_histogram_from_log(
             shard, s_pad, chunk_records=chunk_records, num_weeks=num_weeks,
             axis_name=axis_name, backend=backend, histogram_fn=histogram_fn,
-            capacity_factor=capacity_factor, max_rounds=max_shuffle_rounds)
+            capacity_factor=capacity_factor, max_rounds=max_shuffle_rounds,
+            packed=packed_shuffle)
 
     out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
     fn = shard_map(local, mesh=mesh, in_specs=(), out_specs=out_specs,
@@ -489,7 +501,8 @@ def malstone_lowerable(num_records_global: int, num_sites: int, *,
                        num_weeks: int = WEEKS_PER_YEAR,
                        axis_name=("data", "model"),
                        capacity_factor: float = 1.5,
-                       max_shuffle_rounds: Optional[int] = None):
+                       max_shuffle_rounds: Optional[int] = None,
+                       packed_shuffle: Optional[bool] = None):
     """(fn, example_log_SDS) for dry-run lowering of the paper's workload.
 
     The log is a ShapeDtypeStruct stand-in (no allocation): the paper's
@@ -522,7 +535,7 @@ def malstone_lowerable(num_records_global: int, num_sites: int, *,
                 hist, _ = mapreduce_histogram(
                     log_shard, s_pad, num_weeks, axis_name,
                     capacity_factor=capacity_factor,
-                    max_rounds=max_shuffle_rounds)
+                    max_rounds=max_shuffle_rounds, packed=packed_shuffle)
             elif backend == "mapreduce_combiner":
                 hist = mapreduce_combiner_histogram(
                     log_shard, s_pad, num_weeks, axis_name)

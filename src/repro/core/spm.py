@@ -61,9 +61,12 @@ def site_week_histogram(log: EventLog,
     ones = in_range.astype(jnp.int32)
     marks = (in_range & (log.mark > 0)).astype(jnp.int32)
 
-    total = jax.ops.segment_sum(ones, flat, num_segments=num_sites * num_weeks)
-    marked = jax.ops.segment_sum(marks, flat, num_segments=num_sites * num_weeks)
-    hist = jnp.stack([total, marked], axis=-1)
+    # one fused segment-sum over the stacked [n, 2] payload: a single pass
+    # over the records accumulates both channels (two separate segment_sum
+    # calls walked the records twice)
+    payload = jnp.stack([ones, marks], axis=-1)
+    hist = jax.ops.segment_sum(payload, flat,
+                               num_segments=num_sites * num_weeks)
     return hist.reshape(num_sites, num_weeks, 2)
 
 

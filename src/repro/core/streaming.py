@@ -63,7 +63,7 @@ STREAM_BACKENDS = ("streams", "sphere", "mapreduce", "mapreduce_combiner")
 def _zero_stats() -> ShuffleStats:
     return ShuffleStats(sent=jnp.int32(0), overflow=jnp.int32(0),
                         capacity=jnp.int32(0), rounds=jnp.int32(0),
-                        residual=jnp.int32(0))
+                        residual=jnp.int32(0), bytes_exchanged=jnp.int32(0))
 
 
 def _merge_stats(acc: ShuffleStats, chunk: ShuffleStats) -> ShuffleStats:
@@ -75,6 +75,7 @@ def _merge_stats(acc: ShuffleStats, chunk: ShuffleStats) -> ShuffleStats:
         capacity=jnp.int32(chunk.capacity),
         rounds=jnp.maximum(acc.rounds, jnp.int32(chunk.rounds)),
         residual=acc.residual + chunk.residual,
+        bytes_exchanged=acc.bytes_exchanged + chunk.bytes_exchanged,
     )
 
 
@@ -95,7 +96,8 @@ def _carry_init(backend: str, s_pad: int, num_weeks: int, axis_name):
 def _accumulate_chunk(carry, chunk: EventLog, backend: str,
                       s_pad: int, num_weeks: int, axis_name,
                       histogram_fn, capacity_factor: float,
-                      max_rounds: Optional[int]):
+                      max_rounds: Optional[int],
+                      packed: Optional[bool] = None):
     """Fold one chunk into the carry using the backend's dataflow."""
     if backend in ("streams", "sphere"):
         # local combine only; the cross-device collective runs post-scan
@@ -105,7 +107,7 @@ def _accumulate_chunk(carry, chunk: EventLog, backend: str,
         owned, chunk_stats = mapreduce_histogram(
             chunk, s_pad, num_weeks, axis_name,
             capacity_factor=capacity_factor, histogram_fn=histogram_fn,
-            max_rounds=max_rounds)
+            max_rounds=max_rounds, packed=packed)
         return (hist + owned, _merge_stats(stats, chunk_stats))
     if backend == "mapreduce_combiner":
         owned = mapreduce_combiner_histogram(
@@ -142,7 +144,8 @@ def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
                                  backend: str = "streams",
                                  histogram_fn=None,
                                  capacity_factor: float = 2.0,
-                                 max_rounds: Optional[int] = None):
+                                 max_rounds: Optional[int] = None,
+                                 packed: Optional[bool] = None):
     """Chunked histogram over a materialized (per-device) log shard.
 
     Runs INSIDE ``shard_map``. The shard's record dim must be divisible by
@@ -168,7 +171,7 @@ def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
     def step(carry, chunk):
         return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
                                  axis_name, hist_fn, capacity_factor,
-                                 max_rounds), None
+                                 max_rounds, packed), None
 
     carry, _ = jax.lax.scan(
         step, _carry_init(backend, s_pad, num_weeks, axis_name), chunks)
@@ -184,7 +187,8 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
                                  backend: str = "streams",
                                  histogram_fn=None,
                                  capacity_factor: float = 2.0,
-                                 max_rounds: Optional[int] = None):
+                                 max_rounds: Optional[int] = None,
+                                 packed: Optional[bool] = None):
     """Generate-as-you-go chunked histogram: each scan step regenerates its
     chunk from the seed (``generate_chunk`` is a pure function of
     (seed, chunk_id)) — the log never exists in memory.
@@ -203,7 +207,7 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
         chunk = generate_chunk(seed, cfg, first_chunk + c, chunk_records)
         return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
                                  axis_name, hist_fn, capacity_factor,
-                                 max_rounds), None
+                                 max_rounds, packed), None
 
     carry, _ = jax.lax.scan(
         step, _carry_init(backend, s_pad, num_weeks, axis_name),

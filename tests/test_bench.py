@@ -204,6 +204,34 @@ class TestRegistry:
             for engine in registry.ENGINES:
                 assert f"malstone_b_{backend}_{engine}" in names
 
+    def test_packed_shuffle_scenarios_present(self):
+        """The packed sort-once sweep points exist, are flagged in params,
+        and the smoke preset gates BOTH shuffle code paths."""
+        for cf_name in ("mapreduce_packed_cf0p5", "mapreduce_packed_cf1"):
+            assert cf_name in registry.SCENARIOS, cf_name
+            assert registry.SCENARIOS[cf_name].params["packed"] is True
+        for cf in registry.LOSSLESS_CAPACITY_FACTORS:
+            name = f"mapreduce_lossless_{registry._cf_slug(cf)}"
+            assert registry.SCENARIOS[name].params["packed"] is False
+        smoke = registry.preset_scenario_names("smoke")
+        assert "mapreduce_packed_cf0p5" in smoke
+        assert "mapreduce_lossless_cf0p25" in smoke
+
+    def test_packed_scenario_derived_bytes(self, tiny_ctx):
+        """Packed vs unpacked sweep points at the same capacity factor:
+        identical round accounting, 17/4x fewer exchanged bytes."""
+        packed = registry.SCENARIOS["mapreduce_packed_cf0p5"].run(
+            TINY, tiny_ctx)
+        unpacked = registry.SCENARIOS["mapreduce_lossless_cf0p5"].run(
+            TINY, tiny_ctx)
+        assert packed.derived["shuffle_packed"] is True
+        assert unpacked.derived["shuffle_packed"] is False
+        assert packed.derived["shuffle_overflow"] == 0
+        assert (packed.derived["shuffle_rounds"]
+                == unpacked.derived["shuffle_rounds"])
+        assert unpacked.derived["shuffle_bytes_exchanged"] == (
+            packed.derived["shuffle_bytes_exchanged"] * 17 // 4)
+
     def test_unknown_preset_and_scenario_raise(self):
         with pytest.raises(ValueError):
             registry.preset_scenario_names("nope")
