@@ -17,7 +17,13 @@ The registry covers:
   ``malgen_generate``, ``malgen_encode``;
 - **scaling sweeps** — ``sweep_records_x{1,2,4}`` (records-per-node
   multipliers over the preset base) and ``sweep_mesh_p{1,2,4}`` (mesh
-  size; skipped when the host exposes fewer devices).
+  size; skipped when the host exposes fewer devices);
+- **resumable runs** — ``resume_overhead_{nockpt,ckpt,resume}`` (the
+  checkpoint tax: segmented run without checkpoints, with a fresh
+  checkpoint dir per call, and a pure restore-from-complete-checkpoint)
+  and ``faulty_run_{transient,badhost}`` (seeded chaos schedules through
+  the retry + NodeDoctor-rerouting recovery loop), each carrying its
+  ``RecoveryReport`` accounting in ``derived``.
 
 Each scenario is a named, individually runnable unit:
 ``SCENARIOS[name].run(scale, ctx)`` times it under the shared protocol
@@ -596,6 +602,134 @@ for _p in SWEEP_MESH_SIZES:
             raise ScenarioSkip(
                 f"needs {_p} devices, host exposes {jax.device_count()}")
         return _run_e2e(scale, ctx, generation="fused", nodes=_p)
+
+
+# ------------------------------------------------------------------ resume
+# Checkpoint-tax and chaos-recovery scenarios over repro.core.resume. One
+# runner per scenario (built once — the jitted segment fns cache on the
+# instance, so warmup pays compilation and the samples measure the loop).
+def _resume_runner(scale: Scale, ctx: BenchContext, *,
+                   backend: str = "streams", segment_chunks: int = 1):
+    from repro.core.resume import ResumableRunner
+    seed, num_chunks = ctx.seed(scale)
+    runner = ResumableRunner(
+        seed, ctx.cfg(scale), mesh=ctx.mesh(), num_chunks=num_chunks,
+        chunk_records=scale.chunk_records, segment_chunks=segment_chunks,
+        backend=backend, statistic="B")
+    return runner, num_chunks * scale.chunk_records
+
+
+def _resume_scenario_result(scale: Scale, timing, out,
+                            records: int) -> ScenarioResult:
+    return ScenarioResult(timing=timing, records=records,
+                          derived=out.report.to_derived())
+
+
+@_register("resume_overhead_nockpt", "resume",
+           {"backend": "streams", "engine": "resumable",
+            "checkpoint": "off", "segment_chunks": 1})
+def _resume_overhead_nockpt(scale: Scale, ctx: BenchContext):
+    # segmented host loop, no checkpoint IO: the pure segmentation tax
+    # over malstone_b_streams_streaming (one uninterrupted scan)
+    runner, records = _resume_runner(scale, ctx)
+
+    def fn():
+        out = runner.run()
+        fn.last = out
+        return out.result.rho
+
+    timing, _ = time_callable(fn, warmup=scale.warmup, iters=scale.iters)
+    return _resume_scenario_result(scale, timing, fn.last, records)
+
+
+@_register("resume_overhead_ckpt", "resume",
+           {"backend": "streams", "engine": "resumable",
+            "checkpoint": "fresh", "segment_chunks": 1})
+def _resume_overhead_ckpt(scale: Scale, ctx: BenchContext):
+    # + checkpoint write per segment (fresh dir per call so every sample
+    # actually computes and saves instead of resuming the previous one)
+    import itertools
+    import pathlib
+    import shutil
+    import tempfile
+
+    runner, records = _resume_runner(scale, ctx)
+    root = tempfile.mkdtemp(prefix="bench_resume_ckpt_")
+    counter = itertools.count()
+
+    def fn():
+        d = pathlib.Path(root) / f"call{next(counter)}"
+        out = runner.run(checkpoint_dir=str(d), resume=False)
+        fn.last = out
+        return out.result.rho
+
+    try:
+        timing, _ = time_callable(fn, warmup=scale.warmup, iters=scale.iters)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return _resume_scenario_result(scale, timing, fn.last, records)
+
+
+@_register("resume_overhead_resume", "resume",
+           {"backend": "streams", "engine": "resumable",
+            "checkpoint": "restore", "segment_chunks": 1})
+def _resume_overhead_resume(scale: Scale, ctx: BenchContext):
+    # recovery cost floor: restore a COMPLETE checkpoint and finalize —
+    # zero chunks regenerated (the recovery-time-vs-segment-size curve's
+    # y-intercept; see EXPERIMENTS.md)
+    import shutil
+    import tempfile
+
+    runner, records = _resume_runner(scale, ctx)
+    root = tempfile.mkdtemp(prefix="bench_resume_restore_")
+
+    def fn():
+        out = runner.run(checkpoint_dir=root, resume=True)
+        fn.last = out
+        return out.result.rho
+
+    try:
+        runner.run(checkpoint_dir=root, resume=False)  # populate
+        timing, _ = time_callable(fn, warmup=scale.warmup, iters=scale.iters)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return _resume_scenario_result(scale, timing, fn.last, records)
+
+
+def _run_faulty(scale: Scale, ctx: BenchContext, *, plan,
+                num_hosts: int = 4) -> ScenarioResult:
+    from repro.faults import RetryPolicy
+    runner, records = _resume_runner(scale, ctx)
+    retry = RetryPolicy(max_attempts=6, backoff_s=0.0)
+
+    def fn():
+        # fault schedules are pure functions of (plan.seed, segment,
+        # shard, host, attempt): every timed call replays the same chaos
+        out = runner.run(faults=plan, retry=retry, num_hosts=num_hosts)
+        fn.last = out
+        return out.result.rho
+
+    timing, _ = time_callable(fn, warmup=scale.warmup, iters=scale.iters)
+    return _resume_scenario_result(scale, timing, fn.last, records)
+
+
+@_register("faulty_run_transient", "resume",
+           {"backend": "streams", "engine": "resumable", "faults":
+            "transient_rate=0.25,seed=11", "num_hosts": 4})
+def _faulty_run_transient(scale: Scale, ctx: BenchContext):
+    from repro.faults import FaultPlan
+    return _run_faulty(scale, ctx,
+                       plan=FaultPlan(seed=11, transient_rate=0.25,
+                                      kill_mode="raise"))
+
+
+@_register("faulty_run_badhost", "resume",
+           {"backend": "streams", "engine": "resumable",
+            "faults": "bad_hosts=0", "num_hosts": 4})
+def _faulty_run_badhost(scale: Scale, ctx: BenchContext):
+    from repro.faults import FaultPlan
+    return _run_faulty(scale, ctx,
+                       plan=FaultPlan(bad_hosts=(0,), kill_mode="raise"))
 
 
 # ------------------------------------------------------------------ selection

@@ -52,6 +52,31 @@ class TimingResult:
         return d
 
 
+def timing_from_samples(samples_us: Sequence[float], *,
+                        warmup_iters: int = 0,
+                        steady: bool = False) -> TimingResult:
+    """Build a protocol-conformant ``TimingResult`` from externally
+    collected wall-clock samples (microseconds). For runs that cannot be
+    re-executed under :func:`time_callable` — e.g. a resumable run whose
+    checkpoint side effects make a second call resume instead of compute —
+    so their one-shot wall time still lands in the same BENCH json shape.
+    """
+    samples = [float(s) for s in samples_us]
+    if not samples:
+        raise ValueError("need at least one sample")
+    return TimingResult(
+        us_per_call=statistics.median(samples),
+        us_min=min(samples),
+        us_mean=statistics.fmean(samples),
+        us_std=statistics.pstdev(samples) if len(samples) > 1 else 0.0,
+        rel_dispersion=_quartile_spread(samples),
+        samples_us=tuple(samples),
+        warmup_iters=warmup_iters,
+        iters=len(samples),
+        steady=steady,
+    )
+
+
 def _quartile_spread(samples: Sequence[float]) -> float:
     if len(samples) < 4:
         return 0.0

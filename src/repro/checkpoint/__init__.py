@@ -3,6 +3,7 @@ from repro.checkpoint.store import (
     save_checkpoint,
     load_checkpoint,
     latest_step,
+    sweep_stale_tmp,
 )
 
 __all__ = [
@@ -10,4 +11,5 @@ __all__ = [
     "save_checkpoint",
     "load_checkpoint",
     "latest_step",
+    "sweep_stale_tmp",
 ]

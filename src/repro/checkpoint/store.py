@@ -50,8 +50,18 @@ def _from_numpy(arr: np.ndarray, dtype: str):
 
 
 def save_checkpoint(ckpt_dir, step: int, state: Any,
-                    num_shards: int = 1) -> pathlib.Path:
-    """Write one step. ``state`` is any pytree of arrays."""
+                    num_shards: int = 1,
+                    pre_commit_hook=None) -> pathlib.Path:
+    """Write one step. ``state`` is any pytree of arrays.
+
+    ``pre_commit_hook(tmp_dir)``, if given, runs after every shard file and
+    the manifest are written but BEFORE the atomic rename + commit marker —
+    the exact crash window a preempted writer dies in. Fault injection uses
+    it to kill the process mid-checkpoint; a hook that raises (or exits)
+    leaves only a stale ``.tmp_step_*`` directory behind, which readers
+    never trust (no ``.COMMITTED`` marker) and ``sweep_stale_tmp`` cleans
+    up on the next manager init.
+    """
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     final = ckpt_dir / f"step_{step:08d}"
@@ -79,12 +89,35 @@ def save_checkpoint(ckpt_dir, step: int, state: Any,
         np.savez(tmp / f"shard_{i:03d}.npz", **payload)
     (tmp / "manifest.json").write_text(json.dumps(manifest))
 
+    if pre_commit_hook is not None:
+        pre_commit_hook(tmp)
+
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
     # commit marker LAST: readers only trust committed steps
     (ckpt_dir / f"step_{step:08d}.COMMITTED").touch()
     return final
+
+
+def sweep_stale_tmp(ckpt_dir) -> list[pathlib.Path]:
+    """Remove stale ``.tmp_step_*`` directories left by a writer killed
+    mid-checkpoint (the crash window between shard writes and the atomic
+    rename). Returns the paths removed.
+
+    Safe because this store is single-writer per directory: any tmp dir
+    present when a manager *starts* belongs to a dead writer — a live
+    writer only has a tmp dir in existence inside ``save_checkpoint``.
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    swept = []
+    for tmp in ckpt_dir.glob(".tmp_step_*"):
+        if tmp.is_dir():
+            shutil.rmtree(tmp, ignore_errors=True)
+            swept.append(tmp)
+    return swept
 
 
 def latest_step(ckpt_dir) -> Optional[int]:
@@ -141,9 +174,14 @@ class CheckpointManager:
         self.dir = pathlib.Path(ckpt_dir)
         self.keep = keep
         self.num_shards = num_shards
+        # a writer killed mid-save leaves a .tmp_step_* directory that the
+        # old _gc never matched (it only globs committed markers): sweep
+        # the crash window on init so restarts don't leak disk forever
+        sweep_stale_tmp(self.dir)
 
-    def save(self, step: int, state: Any):
-        save_checkpoint(self.dir, step, state, self.num_shards)
+    def save(self, step: int, state: Any, pre_commit_hook=None):
+        save_checkpoint(self.dir, step, state, self.num_shards,
+                        pre_commit_hook=pre_commit_hook)
         self._gc()
 
     def restore_latest(self, like: Any):

@@ -10,6 +10,8 @@
 - ``windows``  — exposure/monitor window algebra (paper §3).
 - ``nodedoctor`` — SPM applied to cluster telemetry (site=host,
                  entity=step, mark=failure) for bad-node attribution.
+- ``resume``   — checkpointed segment-at-a-time streaming with fault
+                 injection, bounded retry, and doctor-gated rerouting.
 """
 
 from repro.core.spm import (
@@ -30,8 +32,18 @@ from repro.core.runner import (
     malstone_single_device,
     pad_log_to,
 )
+from repro.core.resume import (
+    RecoveryReport,
+    ResumableRunner,
+    ResumeOutcome,
+    malstone_run_resumable,
+)
 
 __all__ = [
+    "RecoveryReport",
+    "ResumableRunner",
+    "ResumeOutcome",
+    "malstone_run_resumable",
     "ShuffleExhaustedError",
     "ShuffleStats",
     "site_week_histogram",

@@ -45,6 +45,27 @@ def host_telemetry_log(host_id: jnp.ndarray, step_id: jnp.ndarray,
                     mark=failed.astype(jnp.int32))
 
 
+def diagnose_telemetry(host_id, step_id, step_time_bucket, failed,
+                       *, num_hosts: int,
+                       num_buckets: int = WEEKS_PER_YEAR,
+                       **diagnose_kw) -> "DoctorReport":
+    """Convenience front-end for host callers (the fault-injection
+    telemetry buffer): pack python sequences straight into the
+    site-entity-mark model and diagnose. ``diagnose_kw`` forwards the
+    thresholds/baseline knobs of :func:`diagnose`.
+
+    ``step_time_bucket`` is a plain bucket *index*; it is scaled to week
+    seconds here because the histogram primitive buckets timestamps by
+    ``SECONDS_PER_WEEK`` (callers of ``host_telemetry_log`` directly must
+    scale themselves — see tests/test_nodedoctor.py)."""
+    from repro.common.types import SECONDS_PER_WEEK
+    log = host_telemetry_log(
+        jnp.asarray(host_id, jnp.int32), jnp.asarray(step_id, jnp.int32),
+        jnp.asarray(step_time_bucket, jnp.int32) * SECONDS_PER_WEEK,
+        jnp.asarray(failed, jnp.int32))
+    return diagnose(log, num_hosts, num_buckets=num_buckets, **diagnose_kw)
+
+
 def diagnose(log: EventLog, num_hosts: int,
              num_buckets: int = WEEKS_PER_YEAR,
              drift_sigmas: float = 0.5,

@@ -42,6 +42,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.common.compat import axis_size
 from repro.common.types import EventLog, WEEKS_PER_YEAR
@@ -66,9 +68,14 @@ def _zero_stats() -> ShuffleStats:
                         residual=jnp.int32(0), bytes_exchanged=jnp.int32(0))
 
 
-def _merge_stats(acc: ShuffleStats, chunk: ShuffleStats) -> ShuffleStats:
+def merge_stats(acc: ShuffleStats, chunk: ShuffleStats) -> ShuffleStats:
     """Fold one chunk's shuffle stats into the scan carry: counters add,
-    ``rounds`` keeps the worst chunk, ``capacity`` is chunk-constant."""
+    ``rounds`` keeps the worst chunk, ``capacity`` is chunk-constant.
+
+    Segment-splitting-invariant: splitting a chunk sequence into segments
+    and folding segment-wise produces the same totals (sums commute, max
+    is associative), which is what makes the carry checkpointable without
+    perturbing the reported accounting."""
     return ShuffleStats(
         sent=acc.sent + chunk.sent,
         overflow=acc.overflow + chunk.overflow,
@@ -79,9 +86,13 @@ def _merge_stats(acc: ShuffleStats, chunk: ShuffleStats) -> ShuffleStats:
     )
 
 
-def _carry_init(backend: str, s_pad: int, num_weeks: int, axis_name):
+_merge_stats = merge_stats  # back-compat alias
+
+
+def carry_init(backend: str, s_pad: int, num_weeks: int, axis_name):
     """Zero carry in the backend's accumulation layout; the ``mapreduce``
-    carry also threads accumulated ShuffleStats."""
+    carry also threads accumulated ShuffleStats. Runs INSIDE ``shard_map``
+    (the mapreduce row count depends on the axis size)."""
     if backend in ("streams", "sphere"):
         return jnp.zeros((s_pad, num_weeks, 2), jnp.int32)
     p = axis_size(axis_name)
@@ -91,6 +102,39 @@ def _carry_init(backend: str, s_pad: int, num_weeks: int, axis_name):
     if backend == "mapreduce_combiner":
         return owned
     raise ValueError(f"unknown streaming backend {backend!r}")
+
+
+_carry_init = carry_init  # back-compat alias
+
+
+def carry_zeros_host(backend: str, parts: int, s_pad: int,
+                     num_weeks: int):
+    """Host-side zero carry in the *global* layout the resumable driver
+    checkpoints: every per-device leaf gains a leading ``parts`` axis, so
+    the whole carry is one pytree of numpy arrays that round-trips through
+    ``repro.checkpoint.store`` (and elastically reshards along that axis).
+    """
+    def z(shape):
+        return np.zeros(shape, np.int32)
+
+    if backend in ("streams", "sphere"):
+        return z((parts, s_pad, num_weeks, 2))
+    owned = z((parts, s_pad // parts, num_weeks, 2))
+    if backend == "mapreduce":
+        stats = ShuffleStats(*(z((parts,)) for _ in ShuffleStats._fields))
+        return (owned, stats)
+    if backend == "mapreduce_combiner":
+        return owned
+    raise ValueError(f"unknown streaming backend {backend!r}")
+
+
+def carry_partition_spec(backend: str, axis_name):
+    """PartitionSpecs matching ``carry_zeros_host``'s layout: every leaf is
+    sharded over its leading device axis."""
+    spec = P(axis_name)
+    if backend == "mapreduce":
+        return (spec, ShuffleStats(*(spec for _ in ShuffleStats._fields)))
+    return spec
 
 
 def _accumulate_chunk(carry, chunk: EventLog, backend: str,
@@ -116,8 +160,40 @@ def _accumulate_chunk(carry, chunk: EventLog, backend: str,
     raise ValueError(f"unknown streaming backend {backend!r}")
 
 
-def _post_scan_collective(carry, backend: str, s_pad: int,
-                          num_weeks: int, axis_name):
+def scan_chunk_range(carry, seed: SeedInfo, cfg: MalGenConfig,
+                     first_chunk, num_chunks: int, chunk_records: int,
+                     *, s_pad: int, num_weeks: int = WEEKS_PER_YEAR,
+                     axis_name="data", backend: str = "streams",
+                     histogram_fn=None, capacity_factor: float = 2.0,
+                     max_rounds: Optional[int] = None,
+                     packed: Optional[bool] = None):
+    """Fold chunks ``[first_chunk, first_chunk + num_chunks)`` into
+    ``carry`` with one ``lax.scan``. Runs INSIDE ``shard_map``.
+
+    This is the checkpointable unit the resumable driver
+    (``repro.core.resume``) is built on: because the site x week histogram
+    is a commutative monoid and ``merge_stats`` is segment-splitting-
+    invariant, running the full chunk range as several consecutive
+    ``scan_chunk_range`` calls (saving the carry in between) is
+    *bit-identical* to one uninterrupted scan. ``first_chunk`` may be a
+    traced int32 (``generate_chunk`` is a pure function of
+    ``(seed, chunk_id)``).
+    """
+    hist_fn = histogram_fn or spm_lib.site_week_histogram
+
+    def step(c, i):
+        chunk = generate_chunk(seed, cfg, first_chunk + i, chunk_records)
+        return _accumulate_chunk(c, chunk, backend, s_pad, num_weeks,
+                                 axis_name, hist_fn, capacity_factor,
+                                 max_rounds, packed), None
+
+    carry, _ = jax.lax.scan(step, carry,
+                            jnp.arange(num_chunks, dtype=jnp.int32))
+    return carry
+
+
+def post_scan_collective(carry, backend: str, s_pad: int,
+                         num_weeks: int, axis_name):
     """Turn the per-device carry into the replicated full-site histogram
     (matching ``malstone_run``'s layout exactly) plus, for ``mapreduce``,
     the globally accumulated ShuffleStats (``None`` otherwise)."""
@@ -135,6 +211,9 @@ def _post_scan_collective(carry, backend: str, s_pad: int,
     gathered = jax.lax.all_gather(carry, axis_name, axis=0)  # [P, S/P, W, 2]
     hist = jnp.transpose(gathered, (1, 0, 2, 3)).reshape(s_pad, num_weeks, 2)
     return hist, stats
+
+
+_post_scan_collective = post_scan_collective  # back-compat alias
 
 
 def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
@@ -200,16 +279,11 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
     ``(histogram, shuffle_stats)`` exactly like
     ``streaming_histogram_from_log``.
     """
-    hist_fn = histogram_fn or spm_lib.site_week_histogram
     first_chunk = jax.lax.axis_index(axis_name) * chunks_per_device
-
-    def step(carry, c):
-        chunk = generate_chunk(seed, cfg, first_chunk + c, chunk_records)
-        return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
-                                 axis_name, hist_fn, capacity_factor,
-                                 max_rounds, packed), None
-
-    carry, _ = jax.lax.scan(
-        step, _carry_init(backend, s_pad, num_weeks, axis_name),
-        jnp.arange(chunks_per_device, dtype=jnp.int32))
-    return _post_scan_collective(carry, backend, s_pad, num_weeks, axis_name)
+    carry = scan_chunk_range(
+        carry_init(backend, s_pad, num_weeks, axis_name), seed, cfg,
+        first_chunk, chunks_per_device, chunk_records, s_pad=s_pad,
+        num_weeks=num_weeks, axis_name=axis_name, backend=backend,
+        histogram_fn=histogram_fn, capacity_factor=capacity_factor,
+        max_rounds=max_rounds, packed=packed)
+    return post_scan_collective(carry, backend, s_pad, num_weeks, axis_name)

@@ -1,0 +1,45 @@
+"""Deterministic fault injection, retry policy, and failure telemetry.
+
+Real cloud middleware is judged as much on surviving node loss as on
+wall-clock (the paper's Sector/Sphere lineage; PRIMEBALL makes fault
+tolerance an explicit property of a credible cloud benchmark). This
+subsystem makes failures *first-class and reproducible*:
+
+- ``plan``      — a seeded ``FaultPlan`` + ``FaultInjector``: transient
+                  per-(segment, host, attempt) failures, persistently bad
+                  hosts, a delayed "straggler" host, and process kills at a
+                  segment boundary or mid-checkpoint-write. Every decision
+                  is a pure function of the plan seed, so any chaos
+                  schedule replays exactly.
+- ``retry``     — bounded retry-with-backoff (modeled on lithops'
+                  ``retries.py``): ``SegmentRetriesExhausted`` instead of
+                  silent drops when the budget runs out.
+- ``telemetry`` — (segment, host, failed, duration-bucket) event buffer
+                  feeding ``repro.core.nodedoctor.diagnose``: the paper's
+                  own SPM/CUSUM machinery attributes failures to hosts so
+                  the resumable driver reroutes shards away from alarmed
+                  hosts instead of retrying them forever.
+"""
+
+from repro.faults.plan import (
+    FaultError,
+    FaultInjector,
+    FaultPlan,
+    NoHealthyHostsError,
+    SimulatedKill,
+    TransientWorkerError,
+)
+from repro.faults.retry import RetryPolicy, SegmentRetriesExhausted
+from repro.faults.telemetry import TelemetryBuffer
+
+__all__ = [
+    "FaultError",
+    "FaultInjector",
+    "FaultPlan",
+    "NoHealthyHostsError",
+    "RetryPolicy",
+    "SegmentRetriesExhausted",
+    "SimulatedKill",
+    "TelemetryBuffer",
+    "TransientWorkerError",
+]

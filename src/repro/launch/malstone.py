@@ -9,6 +9,14 @@ regenerates its records N chunks at a time from the MalGen seed inside a
 ``lax.scan`` (the log is never materialized), so ``--records-per-node`` can
 exceed device memory. N must divide ``--records-per-node``.
 
+``--checkpoint-dir DIR`` makes the streaming run resumable: the scan runs
+in segments of ``--segment-chunks`` chunks, saving the carry after each
+(``repro.core.resume``); ``--resume`` continues a preempted run from the
+latest committed checkpoint, regenerating only unprocessed chunks —
+bit-identical to an uninterrupted run. ``--inject-faults`` executes a
+seeded chaos schedule (``repro.faults.FaultPlan.parse`` spec) under the
+bounded-retry + NodeDoctor-rerouting recovery loop.
+
 Multi-node on one host uses forced host devices; set ``--nodes`` BEFORE any
 other jax usage (this module sets XLA_FLAGS at import like dryrun).
 """
@@ -84,6 +92,24 @@ def main():
     ap.add_argument("--stream-chunks", type=int, default=0, metavar="N",
                     help="stream each node's records in N regenerated chunks"
                          " (0 = one-shot materialized log)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="make the streaming run resumable: run the scan in"
+                         " segments, checkpointing the carry after each into"
+                         " DIR (requires --stream-chunks; incompatible with"
+                         " --gen-device)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest committed checkpoint in"
+                         " --checkpoint-dir (default: start fresh)")
+    ap.add_argument("--segment-chunks", type=int, default=0, metavar="K",
+                    help="chunks per checkpointed segment (default: "
+                         "--stream-chunks, i.e. one segment)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="seeded chaos schedule, e.g. 'transient_rate=0.2,"
+                         "seed=5,bad_hosts=1+3,kill_at_segment=2' (see"
+                         " repro.faults.FaultPlan.parse)")
+    ap.add_argument("--retry-attempts", type=int, default=3,
+                    help="total tries per segment before"
+                         " SegmentRetriesExhausted (resumable runs)")
     ap.add_argument("--gen-device", action="store_true",
                     help="device-parallel MalGen: each node generates its "
                          "own shard on its device (generate_shard_device) "
@@ -125,6 +151,16 @@ def main():
         if args.records_per_node % args.stream_chunks:
             ap.error("--stream-chunks must divide --records-per-node")
         chunk = args.records_per_node // args.stream_chunks
+
+    resumable = args.checkpoint_dir is not None or args.inject_faults
+    if resumable:
+        if not args.stream_chunks:
+            ap.error("--checkpoint-dir/--inject-faults need --stream-chunks"
+                     " (resumable runs segment the streaming scan)")
+        if args.gen_device:
+            ap.error("--checkpoint-dir/--inject-faults are incompatible"
+                     " with --gen-device")
+        return _run_resumable(ap, args, mesh, cfg, chunk, shuffle_kw)
 
     if args.gen_device:
         from repro.core import (
@@ -270,6 +306,94 @@ def main():
             timing, records=total, derived=shuffle_derived)
         out = schema.write_document(doc, path=args.bench_json)
         print(f"wrote {out}")
+
+
+def _run_resumable(ap, args, mesh, cfg, chunk, shuffle_kw):
+    """The --checkpoint-dir / --inject-faults path: one segment-at-a-time
+    run through ``repro.core.resume`` (bit-identical to the uninterrupted
+    streaming engine), wall-clocked once — re-running it under the shared
+    timing loop would resume instead of compute, so the single sample goes
+    through ``timing_from_samples`` into the same BENCH json shape."""
+    from repro.bench.timing import timing_from_samples
+    from repro.core.resume import ResumableRunner
+    from repro.faults import FaultPlan, RetryPolicy
+
+    total = args.nodes * args.records_per_node
+    num_chunks = args.nodes * args.stream_chunks
+    seg = args.segment_chunks or args.stream_chunks
+    plan = FaultPlan.parse(args.inject_faults) if args.inject_faults else None
+
+    print(f"MalGen (streaming, resumable): {total:,} records "
+          f"({total * 100 / 1e6:.0f} MB logical) over {args.nodes} nodes "
+          f"x {args.stream_chunks} chunks of {chunk:,}; checkpoint every "
+          f"{seg} chunks"
+          + (f" -> {args.checkpoint_dir}" if args.checkpoint_dir else
+             " (no checkpoint dir — faults only)"))
+    t0 = time.perf_counter()
+    seed = make_seed_streaming(jax.random.key(0), cfg, num_chunks, chunk)
+    jax.block_until_ready(seed.entity_mark_time)
+    print(f"  seeded in {time.perf_counter() - t0:.1f}s "
+          f"(scatter payload {seed.seed_bytes / 1e6:.1f} MB)")
+    if plan is not None:
+        print(f"  fault schedule: {plan}")
+
+    runner = ResumableRunner(
+        seed, cfg, mesh=mesh, num_chunks=num_chunks, chunk_records=chunk,
+        segment_chunks=seg, backend=args.backend, statistic=args.statistic,
+        **shuffle_kw)
+    t0 = time.perf_counter()
+    out = runner.run(checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+                     faults=plan,
+                     retry=RetryPolicy(max_attempts=args.retry_attempts))
+    wall_us = (time.perf_counter() - t0) * 1e6
+    timing = timing_from_samples([wall_us])
+    rep = out.report
+
+    print(f"MalStone {args.statistic} [{args.backend}, resumable "
+          f"x{args.stream_chunks}/seg{seg}] {wall_us / 1e3:.1f} ms "
+          f"({rep.segments_run}/{rep.segments_total} segments run, "
+          f"{rep.chunks_skipped} chunks restored)")
+    if rep.resumed_from_step is not None:
+        print(f"  resumed from checkpoint step {rep.resumed_from_step}")
+    print(f"  checkpoint: save {rep.checkpoint_save_ms:.1f} ms total, "
+          f"restore {rep.checkpoint_restore_ms:.1f} ms")
+    if plan is not None:
+        print(f"  recovery: {rep.fault_events} injected faults, "
+              f"{rep.segments_retried} segment retries, alarmed hosts "
+              f"{rep.alarmed_hosts}, {rep.rerouted_shards} shards rerouted")
+
+    derived = rep.to_derived()
+    derived["segment_chunks"] = seg
+    if out.shuffle_stats is not None:
+        stats = out.shuffle_stats
+        derived.update(
+            capacity_factor=args.capacity_factor,
+            shuffle_rounds=int(stats.rounds),
+            shuffle_sent=int(stats.sent),
+            shuffle_overflow=int(stats.overflow),
+            shuffle_bytes_exchanged=int(stats.bytes_exchanged))
+        print(f"  shuffle: rounds={derived['shuffle_rounds']} "
+              f"sent={derived['shuffle_sent']} overflow=0 (lossless)")
+
+    if args.bench_json:
+        stat_slug = args.statistic.lower().replace("-", "")
+        scenario = f"launch_malstone_{stat_slug}_{args.backend}_resume"
+        doc = schema.new_document(
+            pathlib.Path(args.bench_json).stem.removeprefix("BENCH_"),
+            env={"source": "repro.launch.malstone"})
+        schema.add_result(
+            doc, scenario,
+            {"backend": args.backend, "statistic": args.statistic,
+             "engine": "resumable", "nodes": args.nodes,
+             "records_per_node": args.records_per_node,
+             "sites": args.sites, "entities": args.entities,
+             "stream_chunks": args.stream_chunks, "segment_chunks": seg,
+             "resume": args.resume,
+             "inject_faults": args.inject_faults or "",
+             "capacity_factor": args.capacity_factor},
+            timing, records=rep.chunks_processed * chunk, derived=derived)
+        path = schema.write_document(doc, path=args.bench_json)
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

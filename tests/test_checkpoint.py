@@ -1,4 +1,6 @@
-"""Checkpoint store: atomicity, round-trip, elastic reshard, GC."""
+"""Checkpoint store: atomicity, round-trip, elastic reshard, GC — and the
+crash windows the resumable driver leans on (pre-commit kill, stale tmp
+sweep, missing shard files, out-of-order GC, carry reshard)."""
 
 import json
 import pathlib
@@ -13,6 +15,7 @@ from repro.checkpoint import (
     latest_step,
     load_checkpoint,
     save_checkpoint,
+    sweep_stale_tmp,
 )
 
 
@@ -95,3 +98,104 @@ def test_shape_mismatch_raises(tmp_path):
                                  "w": jnp.zeros((2, 2))}}
     with pytest.raises(AssertionError):
         load_checkpoint(tmp_path, 1, wrong)
+
+
+def test_missing_only_shard_raises_file_not_found(tmp_path):
+    state = make_state()
+    save_checkpoint(tmp_path, 3, state)
+    (tmp_path / "step_00000003" / "shard_000.npz").unlink()
+    with pytest.raises(FileNotFoundError, match="missing"):
+        load_checkpoint(tmp_path, 3, state)
+
+
+def test_missing_one_of_n_shards_never_restores_silently(tmp_path):
+    # losing one shard of four leaves a truncated concatenation — the
+    # shape check must refuse it, not hand back a short array
+    state = make_state()
+    save_checkpoint(tmp_path, 3, state, num_shards=4)
+    (tmp_path / "step_00000003" / "shard_002.npz").unlink()
+    with pytest.raises(AssertionError, match="ckpt"):
+        load_checkpoint(tmp_path, 3, state)
+
+
+def test_pre_commit_hook_crash_leaves_step_uncommitted(tmp_path):
+    state = make_state()
+    save_checkpoint(tmp_path, 1, state)
+
+    class Boom(Exception):
+        pass
+
+    def hook(tmp_dir):
+        # the crash window: every shard + manifest written, no commit
+        assert (tmp_dir / "manifest.json").exists()
+        assert (tmp_dir / "shard_000.npz").exists()
+        raise Boom()
+
+    with pytest.raises(Boom):
+        save_checkpoint(tmp_path, 2, state, pre_commit_hook=hook)
+    # the torn step is invisible; the previous step is still the latest
+    assert latest_step(tmp_path) == 1
+    names = [p.name for p in tmp_path.iterdir()]
+    assert any(n.startswith(".tmp_step_2_") for n in names), names
+    assert "step_00000002.COMMITTED" not in names
+
+
+def test_manager_init_sweeps_stale_tmp_dirs(tmp_path):
+    state = make_state()
+    with pytest.raises(RuntimeError):
+        save_checkpoint(tmp_path, 2, state,
+                        pre_commit_hook=lambda d: (_ for _ in ()).throw(
+                            RuntimeError("killed")))
+    assert any(p.name.startswith(".tmp_step_")
+               for p in tmp_path.iterdir())
+    mgr = CheckpointManager(tmp_path)  # init sweeps the dead writer's tmp
+    assert not any(p.name.startswith(".tmp_")
+                   for p in tmp_path.iterdir())
+    # and the dir still works normally afterwards
+    mgr.save(3, state)
+    assert latest_step(tmp_path) == 3
+
+
+def test_sweep_stale_tmp_returns_removed_and_handles_missing_dir(tmp_path):
+    assert sweep_stale_tmp(tmp_path / "never_created") == []
+    (tmp_path / ".tmp_step_7_abc").mkdir()
+    (tmp_path / "step_00000001").mkdir()  # committed layout is untouched
+    removed = sweep_stale_tmp(tmp_path)
+    assert [p.name for p in removed] == [".tmp_step_7_abc"]
+    assert (tmp_path / "step_00000001").exists()
+
+
+def test_gc_under_out_of_order_interleaved_saves(tmp_path):
+    # keep-last-N must mean the N *numerically largest* steps, no matter
+    # the order saves landed in (a resumed run can re-save older steps)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = make_state()
+    for s in (5, 1, 9, 3, 7):
+        mgr.save(s, state)
+    steps = sorted(int(p.stem.split("_")[1])
+                   for p in tmp_path.glob("step_*.COMMITTED"))
+    assert steps == [7, 9]
+    # no orphaned step dirs for the GC'd markers
+    dirs = sorted(int(p.name.split("_")[1])
+                  for p in tmp_path.glob("step_*") if p.is_dir())
+    assert dirs == [7, 9]
+    got_step, got = mgr.restore_latest(state)
+    assert got_step == 9
+    assert_state_equal(state, got)
+
+
+def test_streaming_carry_elastic_reshard(tmp_path):
+    # the resumable driver's checkpoint state: global streaming carry with
+    # a leading device axis — written by 4 shards, restored at 1
+    from repro.core.streaming import carry_zeros_host
+
+    carry = carry_zeros_host("mapreduce", 4, 304, 52)
+    fill = jax.tree.map(
+        lambda x: np.arange(x.size, dtype=np.int32).reshape(x.shape) % 251,
+        carry)
+    state = {"carry": fill, "chunks_done": np.int32(3)}
+    save_checkpoint(tmp_path, 2, state, num_shards=4)
+    got = load_checkpoint(tmp_path, 2, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(b).dtype == np.int32
