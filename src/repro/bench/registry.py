@@ -12,7 +12,11 @@ The registry covers:
   backend at capacity factors {0.25, 0.5, 1.0, 2.0} plus one streaming
   point: ``mapreduce_lossless_cf{0p25,0p5,1,2}`` /
   ``mapreduce_lossless_streaming_cf0p5``, each recording the executed
-  shuffle round count in its ``derived`` extras;
+  shuffle round count in its ``derived`` extras — and its paired
+  **word-exchange sweeps**: ``mapreduce_packed_cf{0p5,1}`` (stable
+  sort-once ordering) and ``mapreduce_counting_cf{0p5,1}`` (counting
+  sort, the ``exchange_impl="auto"`` default), bit-identical histograms
+  and stats to the 4-column rows at the same factor;
 - the **MalGen phases** (paper Table 3): ``malgen_seed``,
   ``malgen_generate``, ``malgen_encode``;
 - **scaling sweeps** — ``sweep_records_x{1,2,4}`` (records-per-node
@@ -180,38 +184,45 @@ def _run_malstone(scale: Scale, ctx: BenchContext, *, backend: str,
                   records_per_node: Optional[int] = None,
                   capacity_factor: float = 2.0,
                   packed: Optional[bool] = None,
+                  impl: Optional[str] = None,
                   collect_shuffle_stats: bool = False) -> ScenarioResult:
-    """One timed grid point. With ``collect_shuffle_stats`` the jitted fn
-    returns (rho, ShuffleStats) so ``time_callable``'s output carries the
+    """One timed grid point, routed through the unified ``repro.core.run``
+    front door. With ``collect_shuffle_stats`` the jitted fn returns
+    (rho, ShuffleStats) so ``time_callable``'s output carries the
     shuffle accounting into ``derived`` — used by the lossless sweep.
-    The per-chunk mapreduce shuffle is lossless at any capacity factor
-    (multi-round residual exchange), so the streaming grid uses the same
-    default factor as the one-shot grid."""
-    from repro.core import malstone_run, malstone_run_streaming
+    ``impl`` names the exchange implementation directly; the legacy
+    ``packed`` tri-state maps onto it (True -> sort, False -> columns,
+    None -> auto). The per-chunk mapreduce shuffle is lossless at any
+    capacity factor (multi-round residual exchange), so the streaming
+    grid uses the same default factor as the one-shot grid."""
+    from repro.core import ExchangePlan
+    from repro.core import run as malstone
     nodes = nodes or ctx.nodes
     rpn = records_per_node or scale.records_per_node
     mesh = ctx.mesh(nodes)
     cfg = ctx.cfg(scale)
     total = nodes * rpn
+    if impl is None:
+        impl = {True: "sort", False: "columns", None: "auto"}[packed]
+    plan = ExchangePlan(impl=impl, capacity_factor=capacity_factor)
 
     def shape_out(out):
         return (out[0].rho, out[1]) if collect_shuffle_stats else out.rho
 
     if engine == "oneshot":
         args = (ctx.log(scale, nodes, rpn),)
-        fn = jax.jit(lambda l: shape_out(malstone_run(
+        fn = jax.jit(lambda l: shape_out(malstone(
             l, cfg.num_sites, mesh=mesh, statistic=statistic,
-            backend=backend, capacity_factor=capacity_factor,
-            packed_shuffle=packed,
+            backend=backend, plan=plan,
             return_shuffle_stats=collect_shuffle_stats)))
     elif engine == "streaming":
         seed, num_chunks = ctx.seed(scale, nodes)
         args = (seed,)
-        fn = jax.jit(lambda s: shape_out(malstone_run_streaming(
-            s, cfg.num_sites, mesh=mesh, statistic=statistic,
-            backend=backend, chunk_records=scale.chunk_records, cfg=cfg,
-            num_chunks=num_chunks, capacity_factor=capacity_factor,
-            packed_shuffle=packed,
+        fn = jax.jit(lambda s: shape_out(malstone(
+            s, cfg.num_sites, mesh=mesh, engine="streaming",
+            statistic=statistic, backend=backend,
+            chunk_records=scale.chunk_records, cfg=cfg,
+            num_chunks=num_chunks, plan=plan,
             return_shuffle_stats=collect_shuffle_stats)))
         total = num_chunks * scale.chunk_records
     else:
@@ -262,16 +273,18 @@ def _cf_slug(cf: float) -> str:
 
 
 def _run_mapreduce_lossless(scale: Scale, ctx: BenchContext, *, cf: float,
-                            engine: str = "oneshot",
-                            packed: bool = False) -> ScenarioResult:
-    """One shuffle-sweep point. ``packed`` is explicit (never auto) so the
-    ``mapreduce_lossless_*`` rows stay the 4-column baseline the
-    ``mapreduce_packed_*`` rows are compared against."""
+                            engine: str = "oneshot", packed: bool = False,
+                            impl: Optional[str] = None) -> ScenarioResult:
+    """One shuffle-sweep point. The exchange impl is explicit (never auto)
+    so the ``mapreduce_lossless_*`` rows stay the 4-column baseline the
+    ``mapreduce_packed_*`` / ``mapreduce_counting_*`` rows are compared
+    against."""
     from repro.core import ShuffleExhaustedError
     res = _run_malstone(scale, ctx, backend="mapreduce", statistic="B",
                         engine=engine, capacity_factor=cf, packed=packed,
-                        collect_shuffle_stats=True)
-    res.derived["shuffle_packed"] = packed
+                        impl=impl, collect_shuffle_stats=True)
+    res.derived["shuffle_impl"] = impl or ("sort" if packed else "columns")
+    res.derived["shuffle_packed"] = res.derived["shuffle_impl"] != "columns"
     overflow = res.derived["shuffle_overflow"]
     if overflow != 0:
         # the sweep's whole claim is losslessness — never record timings
@@ -317,6 +330,24 @@ for _cf in PACKED_CAPACITY_FACTORS:
                 "packed": True})
     def _scenario_packed(scale, ctx, *, _c=_cf):
         return _run_mapreduce_lossless(scale, ctx, cf=_c, packed=True)
+
+
+# Counting-sort twins of the packed rows: same one-word projection and
+# byte accounting, but the mapper orders the words with a per-destination
+# histogram + exclusive prefix sum + scatter (two O(n) passes,
+# ``kernels/count_scatter``) instead of a stable argsort. The paired
+# ``mapreduce_packed_cf{0p5,1}`` rows are the baseline: the delta IS this
+# tentpole's claim — identical ``shuffle_bytes_exchanged`` and rounds,
+# lower mapper-side ordering time.
+COUNTING_CAPACITY_FACTORS = (0.5, 1.0)
+
+for _cf in COUNTING_CAPACITY_FACTORS:
+    @_register(f"mapreduce_counting_{_cf_slug(_cf)}", "lossless",
+               {"backend": "mapreduce", "statistic": "B",
+                "engine": "oneshot", "capacity_factor": _cf,
+                "packed": True, "exchange_impl": "counting"})
+    def _scenario_counting(scale, ctx, *, _c=_cf):
+        return _run_mapreduce_lossless(scale, ctx, cf=_c, impl="counting")
 
 
 # ------------------------------------------------------------- kernel paths
@@ -752,10 +783,11 @@ def preset_scenario_names(preset: str) -> list:
                 continue
             if (sc.group == "lossless"
                     and name not in ("mapreduce_lossless_cf0p25",
-                                     "mapreduce_packed_cf0p5")):
-                # one multi-round unpacked point + one packed point keep
-                # the perf gate on both shuffle code paths without running
-                # the full sweep
+                                     "mapreduce_packed_cf0p5",
+                                     "mapreduce_counting_cf0p5")):
+                # one multi-round unpacked point + one packed-sort point +
+                # one counting point keep the perf gate on all three
+                # shuffle code paths without running the full sweep
                 continue
         names.append(name)
     return names

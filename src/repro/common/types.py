@@ -14,6 +14,8 @@ maps onto exactly 52 buckets.
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -162,3 +164,115 @@ def safe_ratio(num: jnp.ndarray, den: jnp.ndarray) -> jnp.ndarray:
     """``num/den`` with 0/0 -> 0, matching "no visits yet" semantics."""
     den_f = den.astype(jnp.float32)
     return jnp.where(den_f > 0, num.astype(jnp.float32) / jnp.maximum(den_f, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# ExchangePlan: the one object that configures the MapReduce shuffle.
+#
+# Before the plan existed, every driver in ``repro.core`` copy-pasted the
+# same four knobs (``packed_shuffle`` / ``capacity_factor`` /
+# ``max_shuffle_rounds`` / ``histogram_impl``) through runner -> streaming ->
+# resume -> launcher. The plan replaces that with ONE frozen value passed as
+# ``plan=``; the old kwargs survive as deprecated aliases that build a plan
+# (``resolve_exchange_plan``) and warn.
+# ---------------------------------------------------------------------------
+
+EXCHANGE_IMPLS = ("auto", "sort", "columns", "counting")
+HISTOGRAM_IMPLS = ("segment_sum", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """How the MapReduce backend moves and reduces records.
+
+    - ``impl``: the exchange implementation. ``"sort"`` = packed sort-once
+      (one uint32 word per record, stable argsort by destination before the
+      round loop); ``"counting"`` = packed counting-sort (per-destination
+      histogram + exclusive prefix sum + scatter — two O(n) passes, no
+      sort; ``repro.kernels.count_scatter``); ``"columns"`` = the 4-column
+      fallback exchange (works for any field range, 17 B/slot on the wire).
+      ``"auto"`` picks ``"counting"`` whenever the one-word projection can
+      represent the workload (``num_sites <= 2^24``, ``num_weeks <= 64``),
+      else ``"columns"``. All three are bit-identical in histograms AND
+      ShuffleStats accounting; only ``bytes_exchanged`` (4 vs 17 B/slot)
+      and wall clock differ.
+    - ``capacity_factor``: per-destination bucket capacity as a fraction of
+      ``records / P`` (the shuffle is lossless at any value — smaller just
+      runs more rounds).
+    - ``max_shuffle_rounds``: optional explicit round cap; exhausting it
+      raises ``ShuffleExhaustedError``, never drops records. ``None`` uses
+      the provably sufficient static bound.
+    - ``histogram_impl``: the local-combine reducer. ``"segment_sum"`` =
+      the jnp fused segment-sum; ``"pallas"`` = the ``segment_hist`` Pallas
+      kernel — and, for word-based exchanges (``sort``/``counting``), the
+      fused unpack+histogram kernel that reduces shuffled words without
+      materializing the unpacked columns.
+
+    Non-mapreduce backends only consume ``histogram_impl``; the other
+    fields are ignored (so one plan can drive a backend sweep).
+    """
+
+    impl: str = "auto"
+    capacity_factor: float = 2.0
+    max_shuffle_rounds: Optional[int] = None
+    histogram_impl: str = "segment_sum"
+
+    def __post_init__(self):
+        if self.impl not in EXCHANGE_IMPLS:
+            raise ValueError(
+                f"ExchangePlan.impl must be one of {EXCHANGE_IMPLS}, "
+                f"got {self.impl!r}")
+        if self.histogram_impl not in HISTOGRAM_IMPLS:
+            raise ValueError(
+                f"ExchangePlan.histogram_impl must be one of "
+                f"{HISTOGRAM_IMPLS}, got {self.histogram_impl!r}")
+        if self.capacity_factor <= 0:
+            raise ValueError(
+                f"ExchangePlan.capacity_factor must be > 0, "
+                f"got {self.capacity_factor}")
+        if self.max_shuffle_rounds is not None and self.max_shuffle_rounds < 1:
+            raise ValueError(
+                f"ExchangePlan.max_shuffle_rounds must be >= 1 (or None), "
+                f"got {self.max_shuffle_rounds}")
+
+
+def resolve_exchange_plan(plan: Optional[ExchangePlan] = None, *,
+                          capacity_factor: Optional[float] = None,
+                          max_shuffle_rounds: Optional[int] = None,
+                          packed_shuffle: Optional[bool] = None,
+                          histogram_impl: Optional[str] = None,
+                          _caller: str = "this driver") -> ExchangePlan:
+    """Fold the deprecated per-kwarg shuffle knobs into an ``ExchangePlan``.
+
+    Every ``malstone_run*`` driver routes its legacy kwargs through here:
+    passing any of them builds an equivalent plan and emits a
+    ``DeprecationWarning``; passing them *alongside* an explicit ``plan``
+    is ambiguous and raises. ``packed_shuffle`` maps ``True -> "sort"``,
+    ``False -> "columns"`` (its historical meanings; ``None`` stays
+    ``"auto"``, which now prefers the counting exchange).
+    """
+    legacy = {k: v for k, v in (("capacity_factor", capacity_factor),
+                                ("max_shuffle_rounds", max_shuffle_rounds),
+                                ("packed_shuffle", packed_shuffle),
+                                ("histogram_impl", histogram_impl))
+              if v is not None}
+    if plan is not None:
+        if legacy:
+            raise ValueError(
+                f"pass either plan= or the legacy shuffle kwargs, not both "
+                f"(got plan and {sorted(legacy)})")
+        return plan
+    if not legacy:
+        return ExchangePlan()
+    warnings.warn(
+        f"{sorted(legacy)} on {_caller} are deprecated aliases — build an "
+        f"ExchangePlan and pass plan= instead",
+        DeprecationWarning, stacklevel=3)
+    impl = "auto"
+    if packed_shuffle is not None:
+        impl = "sort" if packed_shuffle else "columns"
+    return ExchangePlan(
+        impl=impl,
+        capacity_factor=2.0 if capacity_factor is None else capacity_factor,
+        max_shuffle_rounds=max_shuffle_rounds,
+        histogram_impl=histogram_impl or "segment_sum")

@@ -12,8 +12,13 @@
                  entity=step, mark=failure) for bad-node attribution.
 - ``resume``   — checkpointed segment-at-a-time streaming with fault
                  injection, bounded retry, and doctor-gated rerouting.
+- ``api``      — ``run(source, mesh=..., plan=..., engine=...)``: the
+                 unified front door routing EventLog/seed sources to the
+                 drivers above under one ``ExchangePlan``.
 """
 
+from repro.common.types import ExchangePlan
+from repro.core.api import ENGINES, run
 from repro.core.spm import (
     site_week_histogram,
     malstone_a,
@@ -40,6 +45,9 @@ from repro.core.resume import (
 )
 
 __all__ = [
+    "ENGINES",
+    "ExchangePlan",
+    "run",
     "RecoveryReport",
     "ResumableRunner",
     "ResumeOutcome",

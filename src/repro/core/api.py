@@ -1,0 +1,106 @@
+"""One front door for every MalStone driver.
+
+The six drivers in ``runner.py`` / ``resume.py`` grew one at a time, each
+with its own copy of the shuffle keyword list. ``run`` collapses them to
+three decisions:
+
+- **source** — what the records are: a materialized :class:`EventLog`
+  (sharded over the mesh) or a MalGen :class:`SeedInfo` (the log is
+  regenerated on device and never exists globally).
+- **engine** — how the records flow: ``"oneshot"`` (whole shard in one
+  backend pass), ``"streaming"`` (chunked ``lax.scan`` carry),
+  ``"generated"`` / ``"generated_streaming"`` (fused on-device generation,
+  one-shot resp. chunked) or ``"resumable"`` (checkpointed segments; returns
+  a :class:`~repro.core.resume.ResumeOutcome`).
+- **plan** — how the ``mapreduce`` exchange behaves: one
+  :class:`~repro.common.types.ExchangePlan` (impl / capacity / round cap /
+  reducer) instead of N copies of ``capacity_factor=...`` kwargs.
+
+Everything else (``backend``, ``statistic``, ``chunk_records``,
+``return_shuffle_stats``, ...) passes through to the routed driver
+unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.common.types import EventLog, ExchangePlan
+
+ENGINES = ("oneshot", "streaming", "generated", "generated_streaming",
+           "resumable")
+
+
+def run(source, num_sites: Optional[int] = None, *, mesh,
+        engine: str = "oneshot", plan: Optional[ExchangePlan] = None,
+        cfg=None, partitioned: bool = False, **kwargs):
+    """Run MalStone: route ``source`` x ``engine`` to the right driver.
+
+    ``source`` is an :class:`EventLog` or a MalGen ``SeedInfo``.
+    ``num_sites`` is required for a log source and defaults to
+    ``cfg.num_sites`` for a seed source; seed sources always require
+    ``cfg``. Engine-specific sizing flows through ``kwargs``:
+
+    ==================== ======== =============================================
+    engine               source   routed driver (required kwargs)
+    ==================== ======== =============================================
+    oneshot              log      ``malstone_run`` (``malstone_run_partitioned``
+                                  with ``partitioned=True``)
+    oneshot/generated    seed     ``malstone_run_generated``
+                                  (``records_per_shard``)
+    streaming            log      ``malstone_run_streaming``
+    streaming            seed     ``malstone_run_streaming`` (``num_chunks``)
+    generated_streaming  seed     ``malstone_run_generated_streaming``
+                                  (``records_per_shard``)
+    resumable            seed     ``malstone_run_resumable`` (``num_chunks``,
+                                  ``chunk_records``, ``segment_chunks``)
+    ==================== ======== =============================================
+
+    Returns whatever the routed driver returns: an ``SpmResult``
+    (``(SpmResult, ShuffleStats)`` with ``return_shuffle_stats=True``), or
+    a ``ResumeOutcome`` for ``engine="resumable"``.
+    """
+    from repro.core import resume as resume_mod
+    from repro.core import runner as runner_mod
+
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; have {ENGINES}")
+    is_log = isinstance(source, EventLog)
+    if is_log:
+        if num_sites is None:
+            raise ValueError("an EventLog source requires num_sites=")
+        if engine in ("generated", "generated_streaming", "resumable"):
+            raise ValueError(
+                f"engine {engine!r} regenerates records on device and "
+                f"needs a MalGen SeedInfo source, not a materialized "
+                f"EventLog (use engine='oneshot' or 'streaming')")
+    else:
+        if cfg is None:
+            raise ValueError("a seed source requires cfg= (the MalGenConfig)")
+        if num_sites is None:
+            num_sites = cfg.num_sites
+
+    if partitioned:
+        if not (is_log and engine == "oneshot"):
+            raise ValueError(
+                "partitioned=True is the oneshot EventLog production "
+                "layout; other engines re-assemble the full-site result")
+        return runner_mod.malstone_run_partitioned(
+            source, num_sites, mesh=mesh, plan=plan, **kwargs)
+
+    if engine == "oneshot" and is_log:
+        return runner_mod.malstone_run(
+            source, num_sites, mesh=mesh, plan=plan, **kwargs)
+    if engine in ("oneshot", "generated"):  # seed source
+        return runner_mod.malstone_run_generated(
+            source, cfg, mesh=mesh, num_sites=num_sites, plan=plan, **kwargs)
+    if engine == "streaming":
+        if not is_log:
+            kwargs.setdefault("cfg", cfg)
+        return runner_mod.malstone_run_streaming(
+            source, num_sites, mesh=mesh, plan=plan, **kwargs)
+    if engine == "generated_streaming":
+        return runner_mod.malstone_run_generated_streaming(
+            source, cfg, mesh=mesh, num_sites=num_sites, plan=plan, **kwargs)
+    return resume_mod.malstone_run_resumable(
+        source, cfg, mesh=mesh, num_sites=num_sites, plan=plan, **kwargs)

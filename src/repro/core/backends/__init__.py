@@ -28,6 +28,7 @@ from repro.core.backends.mapreduce import (
     ShuffleExhaustedError,
     ShuffleStats,
     mapreduce_histogram,
+    resolve_exchange_impl,
     shuffle_stats,
 )
 
@@ -37,6 +38,7 @@ __all__ = [
     "streams_histogram",
     "sphere_histogram",
     "mapreduce_histogram",
+    "resolve_exchange_impl",
     "shuffle_stats",
     "ShuffleStats",
     "ShuffleExhaustedError",

@@ -24,22 +24,34 @@ exactly that bound, making the loop provably lossless. An explicit smaller
 runner raises ``ShuffleExhaustedError`` if it is exhausted with records
 still undelivered (never a silent drop).
 
-Two exchange implementations share that loop:
+Three exchange implementations share that loop (``ExchangePlan.impl``):
 
-- **packed sort-once** (the default whenever the fields fit —
-  ``num_sites <= 2^24`` and ``num_weeks <= 64``): the Reducer only ever
-  needs ``(site, week, mark, valid)``, so the mapper projects each record
-  into ONE uint32 word (``repro.common.types.pack_site_week_mark``) and
-  stable-sorts the words by destination ONCE before the loop. Each round
-  then just gathers the next ``capacity``-wide window per destination from
-  the already-sorted array (the residual stays sorted by construction): no
-  per-round argsort, no per-round residual re-materialization, and the
-  ``all_to_all`` carries 4 bytes per bucket slot instead of 17.
-- **4-column fallback** (``_pack_buckets``): the original path — per-round
-  stable argsort + scatter of all four record columns plus validity, kept
-  for field ranges the packed word cannot represent and as the bit-identity
-  oracle (tests assert the two paths produce identical histograms AND
-  identical ``sent``/``rounds``/``residual``/``overflow`` accounting).
+- **packed counting-sort** (``"counting"`` — what ``"auto"`` picks
+  whenever the fields fit: ``num_sites <= 2^24`` and ``num_weeks <= 64``):
+  the Reducer only ever needs ``(site, week, mark, valid)``, so the mapper
+  projects each record into ONE uint32 word
+  (``repro.common.types.pack_site_week_mark``) and orders the words by
+  destination with a **stable counting sort** — per-destination histogram,
+  exclusive prefix sum over the ``P+1``-entry table, scatter
+  (``repro.kernels.count_scatter``: Pallas kernels on TPU, a jnp
+  counting-scatter elsewhere). Two O(n) record passes; the destination
+  key space is only ``P`` devices, so an O(n log n) comparison sort is
+  pure waste. Each round then gathers the next ``capacity``-wide window
+  per destination from the ordered array (the residual stays ordered by
+  construction) and the ``all_to_all`` carries 4 bytes per bucket slot
+  instead of 17.
+- **packed sort-once** (``"sort"``): identical except the ordering pass
+  is a stable ``argsort``. A stable counting sort produces the *same
+  permutation* as a stable comparison sort, so the two packed paths are
+  bit-identical arrays-in, arrays-out — histograms AND every ShuffleStats
+  field — and "sort" is kept as the counting path's oracle and its bench
+  comparison row (``mapreduce_packed_*`` vs ``mapreduce_counting_*``).
+- **4-column fallback** (``"columns"``): the original path — per-round
+  stable argsort + scatter of all four record columns plus validity
+  (``_pack_buckets``), kept for field ranges the packed word cannot
+  represent and as the packed paths' cross-representation oracle (tests
+  assert all paths produce identical histograms AND identical
+  ``sent``/``rounds``/``residual``/``overflow`` accounting).
 
 ``ShuffleStats.bytes_exchanged`` makes the paper's defining cost — bytes
 crossing the network — a first-class measured quantity: per-device bucket
@@ -60,6 +72,7 @@ import numpy as np
 
 from repro.common.compat import axis_size
 from repro.common.types import (
+    EXCHANGE_IMPLS,
     EventLog,
     PACK_MAX_SITES,
     PACK_MAX_WEEKS,
@@ -69,6 +82,7 @@ from repro.common.types import (
     unpack_site_week_mark,
 )
 from repro.core.spm import site_week_histogram
+from repro.kernels.count_scatter import count_scatter
 
 # Bytes one bucket slot occupies on the wire per shuffle round.
 PACKED_SLOT_BYTES = 4        # one uint32 word
@@ -208,6 +222,50 @@ def resolve_packed_shuffle(packed: Optional[bool], num_sites: int,
     return bool(packed)
 
 
+def resolve_exchange_impl(impl: Optional[str], num_sites: int,
+                          num_weeks: int,
+                          packed: Optional[bool] = None) -> str:
+    """Static exchange-implementation decision (module docstring).
+
+    ``impl=None`` defers to the legacy ``packed`` tri-state
+    (``True -> "sort"``, ``False -> "columns"``, ``None -> "auto"``);
+    ``"auto"`` picks the counting exchange whenever the one-word projection
+    can represent the workload, else the 4-column fallback. Forcing a
+    word-based impl (``"sort"``/``"counting"``) on an unrepresentable
+    workload raises — never a silent fallback.
+    """
+    if impl is None:
+        impl = "auto" if packed is None else ("sort" if packed else "columns")
+    if impl not in EXCHANGE_IMPLS:
+        raise ValueError(
+            f"exchange impl must be one of {EXCHANGE_IMPLS}, got {impl!r}")
+    supported = packed_shuffle_supported(num_sites, num_weeks)
+    if impl == "auto":
+        return "counting" if supported else "columns"
+    if impl in ("sort", "counting") and not supported:
+        raise ValueError(
+            f"exchange impl {impl!r} requested but the one-word projection "
+            f"cannot represent num_sites={num_sites} (max {PACK_MAX_SITES}) "
+            f"/ num_weeks={num_weeks} (max {PACK_MAX_WEEKS}); use "
+            f"impl='auto' for the automatic 4-column fallback")
+    return impl
+
+
+def _sort_words(words: jnp.ndarray, dest: jnp.ndarray, num_partitions: int):
+    """Order words by destination via stable argsort (the "sort" impl).
+    Returns ``(words_sorted, starts)`` — the counting path's oracle."""
+    order = jnp.argsort(dest, stable=True)
+    starts = jnp.searchsorted(dest[order], jnp.arange(num_partitions + 1))
+    return words[order], starts
+
+
+def _counting_words(words: jnp.ndarray, dest: jnp.ndarray,
+                    num_partitions: int):
+    """Order words by destination via stable counting sort (the "counting"
+    impl) — bit-identical output to ``_sort_words``, two O(n) passes."""
+    return count_scatter(words, dest, num_partitions)
+
+
 def mapreduce_histogram(log: EventLog,
                         num_sites: int,
                         num_weeks: int = WEEKS_PER_YEAR,
@@ -216,6 +274,8 @@ def mapreduce_histogram(log: EventLog,
                         histogram_fn=site_week_histogram,
                         max_rounds: Optional[int] = None,
                         packed: Optional[bool] = None,
+                        impl: Optional[str] = None,
+                        word_histogram_fn=None,
                         ) -> tuple[jnp.ndarray, ShuffleStats]:
     """Multi-round lossless shuffle + reduce. Returns (owned hist, stats).
 
@@ -233,13 +293,21 @@ def mapreduce_histogram(log: EventLog,
     thread it must check (``repro.core.runner`` raises
     ``ShuffleExhaustedError``).
 
-    ``packed`` selects the exchange implementation (module docstring):
-    ``None`` = auto — the packed sort-once path whenever
-    ``num_sites <= 2^24`` and ``num_weeks <= 64``, else the 4-column
-    fallback; ``True`` / ``False`` force one (forcing packed on an
-    unrepresentable workload raises ``ValueError``). Both paths produce
-    bit-identical histograms and identical stats semantics; only
-    ``bytes_exchanged`` (and wall time) differ.
+    ``impl`` selects the exchange implementation (module docstring):
+    ``"counting"`` / ``"sort"`` / ``"columns"`` / ``"auto"``; ``None``
+    defers to the legacy ``packed`` tri-state (``True -> "sort"``,
+    ``False -> "columns"``, ``None -> "auto"``). ``"auto"`` is the
+    counting exchange whenever ``num_sites <= 2^24`` and
+    ``num_weeks <= 64``, else the 4-column fallback; forcing a word-based
+    impl on an unrepresentable workload raises ``ValueError``. All paths
+    produce bit-identical histograms and identical stats; only
+    ``bytes_exchanged`` (4 vs 17 B/slot) and wall time differ.
+
+    ``word_histogram_fn`` (optional) is the fused reducer hook for the
+    word-based impls: called as ``(shipped_words, my_index, s_local,
+    num_weeks, p)`` instead of unpack + ``histogram_fn`` — the Pallas
+    ``segment_hist_packed_words`` kernel reduces the shuffled words
+    without materializing the unpacked columns. Ignored by ``"columns"``.
     """
     p = axis_size(axis_name)
     n = log.num_records
@@ -248,11 +316,16 @@ def mapreduce_histogram(log: EventLog,
         max_rounds = shuffle_round_bound(n, capacity)
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
-    impl = (_packed_shuffle_histogram
-            if resolve_packed_shuffle(packed, num_sites, num_weeks)
-            else _unpacked_shuffle_histogram)
-    return impl(log, num_sites, num_weeks, axis_name, capacity,
-                histogram_fn, max_rounds)
+    impl = resolve_exchange_impl(impl, num_sites, num_weeks, packed=packed)
+    if impl == "columns":
+        return _unpacked_shuffle_histogram(log, num_sites, num_weeks,
+                                           axis_name, capacity, histogram_fn,
+                                           max_rounds)
+    return _word_shuffle_histogram(
+        log, num_sites, num_weeks, axis_name, capacity, histogram_fn,
+        max_rounds,
+        order_words=_sort_words if impl == "sort" else _counting_words,
+        word_histogram_fn=word_histogram_fn)
 
 
 def _shuffle_loop(body, carry0, *, capacity: int,
@@ -370,37 +443,53 @@ def _unpacked_shuffle_histogram(log: EventLog, num_sites: int,
     return hist, stats
 
 
-def _packed_shuffle_histogram(log: EventLog, num_sites: int,
-                              num_weeks: int, axis_name: str,
-                              capacity: int, histogram_fn,
-                              max_rounds: int):
-    """Packed sort-once exchange (module docstring): project every record
-    to one uint32 word, stable-sort the words by destination ONCE, then
-    each round gathers the next ``capacity``-wide window per destination
-    from the sorted array. The residual of round ``r`` is exactly the
-    sorted suffix past offset ``(r+1) * capacity`` of each destination
-    segment — sorted by construction, so no per-round argsort and no
-    residual buffer at all; the loop carries only scalar counters and the
-    histogram."""
+def _word_shuffle_histogram(log: EventLog, num_sites: int,
+                            num_weeks: int, axis_name: str,
+                            capacity: int, histogram_fn,
+                            max_rounds: int, *, order_words,
+                            word_histogram_fn=None):
+    """Packed word exchange (module docstring): project every record to
+    one uint32 word, order the words by destination ONCE before the loop
+    (``order_words`` — stable argsort for the "sort" impl, counting sort
+    for "counting"; bit-identical permutations), then each round gathers
+    the next ``capacity``-wide window per destination from the ordered
+    array. The residual of round ``r`` is exactly the ordered suffix past
+    offset ``(r+1) * capacity`` of each destination segment — ordered by
+    construction, so no per-round re-ordering and no residual buffer at
+    all; the loop carries only scalar counters and the histogram."""
     p = axis_size(axis_name)
-    n = log.num_records
     my = jax.lax.axis_index(axis_name)
     s_local = num_sites // p
 
     valid = log.valid_mask()
     # Mapper-side projection: week is bucketed BEFORE the exchange (the
     # Reducer's own bucketing function, so the round-trip is exact) and the
-    # four reducer-relevant fields become one word. Invalid rows sort to a
+    # four reducer-relevant fields become one word. Invalid rows order to a
     # trailing pseudo-destination and pack to the all-zero word.
     dest = jnp.where(valid, (log.site_id % p).astype(jnp.int32), p)
     words = pack_site_week_mark(log.site_id, log.week(num_weeks=num_weeks),
                                 log.mark, valid)
 
-    order = jnp.argsort(dest, stable=True)          # THE sort — once
-    words_sorted = words[order]
-    starts = jnp.searchsorted(dest[order], jnp.arange(p + 1))
+    words_sorted, starts = order_words(words, dest, p)  # THE ordering — once
     counts = starts[1:] - starts[:-1]               # valid records per dest
     lane = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+
+    def reduce_words(shipped_words):
+        """Fold one round's received words into an owned-histogram
+        increment. The fused path hands the words straight to the Pallas
+        unpack+histogram kernel; the default path unpacks and rebuilds a
+        minimal EventLog so any histogram_fn reduces it unchanged —
+        ``week * SECONDS_PER_WEEK`` re-buckets to exactly ``week``."""
+        if word_histogram_fn is not None:
+            return word_histogram_fn(shipped_words, my, s_local, num_weeks, p)
+        site, week, mark, ok = unpack_site_week_mark(shipped_words)
+        # Re-base strided site ids to local dense rows (site % P == my by
+        # construction; guard anyway).
+        ok = ok & ((site % p) == my)
+        rebased = EventLog(site_id=site // p, entity_id=jnp.zeros_like(site),
+                           timestamp=week * SECONDS_PER_WEEK, mark=mark,
+                           valid=ok)
+        return histogram_fn(rebased, s_local, num_weeks)
 
     def body(carry):
         r, _, hist, sent, deferred = carry
@@ -411,19 +500,10 @@ def _packed_shuffle_histogram(log: EventLog, num_sites: int,
                         jnp.uint32(0))
         shipped = jax.lax.all_to_all(buf, axis_name, split_axis=0,
                                      concat_axis=0, tiled=True)
-        site, week, mark, ok = unpack_site_week_mark(shipped.reshape(-1))
-        # Re-base strided site ids to local dense rows (site % P == my by
-        # construction; guard anyway) and rebuild a minimal EventLog so any
-        # histogram_fn (incl. the Pallas kernel) reduces it unchanged —
-        # week * SECONDS_PER_WEEK re-buckets to exactly ``week``.
-        ok = ok & ((site % p) == my)
-        rebased = EventLog(site_id=site // p, entity_id=jnp.zeros_like(site),
-                           timestamp=week * SECONDS_PER_WEEK, mark=mark,
-                           valid=ok)
         left = jnp.sum(jnp.maximum(counts - (r + 1) * capacity, 0))
         return (r + 1,
                 jax.lax.psum(left, axis_name),
-                hist + histogram_fn(rebased, s_local, num_weeks),
+                hist + reduce_words(shipped.reshape(-1)),
                 sent + jnp.sum(live),
                 deferred + left)
 

@@ -1,0 +1,57 @@
+"""ExchangePlan -> callable resolution for the core drivers.
+
+``ExchangePlan`` itself lives in ``repro.common.types`` (it is pure data);
+this module maps its ``histogram_impl`` field to the concrete reducer
+callables the backends consume, importing the Pallas kernels only when
+they are actually selected.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.common.types import ExchangePlan
+
+
+def resolve_histogram_fns(plan: ExchangePlan, histogram_fn=None):
+    """Map ``plan.histogram_impl`` to ``(histogram_fn, word_histogram_fn)``.
+
+    - ``histogram_fn``: the per-EventLog local-combine reducer every
+      backend accepts, or ``None`` for the backends' built-in
+      ``site_week_histogram`` (the ``"segment_sum"`` impl).
+    - ``word_histogram_fn``: the fused unpack+histogram hook the word-based
+      MapReduce exchanges call directly on shuffled packed words
+      (``mapreduce_histogram(word_histogram_fn=...)``), or ``None``.
+
+    An explicit ``histogram_fn`` argument (a caller-supplied callable)
+    always wins and disables the fused word path so the caller's function
+    observes every record, matching the pre-plan contract.
+    """
+    if histogram_fn is not None:
+        return histogram_fn, None
+    if plan.histogram_impl == "pallas":
+        from repro.kernels.segment_hist.ops import (
+            segment_hist_eventlog,
+            segment_hist_packed_words,
+        )
+        interpret = jax.default_backend() != "tpu"
+
+        def word_fn(words, my_index, s_local, num_weeks, p):
+            return segment_hist_packed_words(
+                words, my_index, num_sites_local=s_local, num_partitions=p,
+                num_weeks=num_weeks, interpret=interpret)
+
+        return (functools.partial(segment_hist_eventlog, interpret=interpret),
+                word_fn)
+    return None, None
+
+
+def plan_fingerprint_fields(plan: Optional[ExchangePlan]) -> tuple:
+    """The plan fields that change numerical results or their layout —
+    folded into checkpoint fingerprints (``repro.core.resume``)."""
+    plan = plan or ExchangePlan()
+    return (plan.impl, plan.capacity_factor, plan.max_shuffle_rounds,
+            plan.histogram_impl)

@@ -19,9 +19,11 @@ from repro.common.compat import shard_map
 
 from repro.common.types import (
     EventLog,
+    ExchangePlan,
     PAD_SHARD_HASH,
     SpmResult,
     WEEKS_PER_YEAR,
+    resolve_exchange_plan,
 )
 from repro.core import spm as spm_lib
 from repro.core.backends import (
@@ -33,6 +35,7 @@ from repro.core.backends import (
     streams_histogram,
 )
 from repro.core.backends.mapreduce import mapreduce_combiner_histogram
+from repro.core.plan import resolve_histogram_fns
 
 _STATS_SPEC = ShuffleStats(P(), P(), P(), P(), P(), P())
 
@@ -138,13 +141,12 @@ def _axis_size(mesh: Mesh, axis_name) -> int:
 
 def _local_backend_histogram(log_shard: EventLog, backend: str, s_pad: int,
                              num_weeks: int, axis_name, hist_fn,
-                             capacity_factor: float,
-                             max_shuffle_rounds: Optional[int],
-                             packed_shuffle: Optional[bool] = None):
+                             plan: ExchangePlan, word_histogram_fn=None):
     """One device's backend dataflow -> (replicated full-site histogram,
     ShuffleStats or None). Runs INSIDE ``shard_map``; shared by the
-    materialized (``malstone_run``) and fused-generation
-    (``malstone_run_generated``) drivers."""
+    materialized (``malstone_run``), fused-generation
+    (``malstone_run_generated``) and partitioned drivers. The ``mapreduce``
+    exchange is configured by ``plan`` (impl / capacity / round cap)."""
     if backend == "streams":
         return streams_histogram(log_shard, s_pad, num_weeks, axis_name,
                                  histogram_fn=hist_fn), None
@@ -160,8 +162,9 @@ def _local_backend_histogram(log_shard: EventLog, backend: str, s_pad: int,
         if backend == "mapreduce":
             owned, stats = mapreduce_histogram(
                 log_shard, s_pad, num_weeks, axis_name,
-                capacity_factor=capacity_factor, histogram_fn=hist_fn,
-                max_rounds=max_shuffle_rounds, packed=packed_shuffle)
+                capacity_factor=plan.capacity_factor, histogram_fn=hist_fn,
+                max_rounds=plan.max_shuffle_rounds, impl=plan.impl,
+                word_histogram_fn=word_histogram_fn)
             stats = shuffle_stats(stats, axis_name)
         else:
             owned = mapreduce_combiner_histogram(
@@ -194,7 +197,8 @@ def malstone_run(log: EventLog,
                  backend: str = "streams",
                  num_weeks: int = WEEKS_PER_YEAR,
                  axis_name="data",
-                 capacity_factor: float = 2.0,
+                 plan: Optional[ExchangePlan] = None,
+                 capacity_factor: Optional[float] = None,
                  max_shuffle_rounds: Optional[int] = None,
                  packed_shuffle: Optional[bool] = None,
                  histogram_fn=None,
@@ -207,36 +211,49 @@ def malstone_run(log: EventLog,
     The log must be shardable over the record dimension by the total size of
     ``axis_name`` (caller pads with ``valid=False`` rows if needed).
 
+    The shuffle/reducer configuration is one ``plan``
+    (:class:`~repro.common.types.ExchangePlan`): ``plan.impl`` selects the
+    ``mapreduce`` exchange implementation (``"auto"`` — the default — uses
+    the one-word packed *counting-sort* path whenever the padded site count
+    fits in 24 bits and ``num_weeks <= 64``, falling back to the 4-column
+    exchange; ``"counting"`` / ``"sort"`` / ``"columns"`` force one),
+    ``plan.capacity_factor`` sizes the per-round buckets,
+    ``plan.max_shuffle_rounds`` caps the residual loop and
+    ``plan.histogram_impl`` picks the reducer (``"pallas"`` fuses
+    unpack+histogram over the shuffled words). All impls are bit-identical;
+    only ``stats.bytes_exchanged`` and wall time differ (see
+    ``backends/mapreduce.py``). The ``capacity_factor`` /
+    ``max_shuffle_rounds`` / ``packed_shuffle`` keyword arguments are
+    deprecated aliases that build a plan (and warn).
+
     The ``mapreduce`` backend's shuffle is lossless at any
-    ``capacity_factor`` (multi-round residual exchange — see
-    ``backends/mapreduce.py``). ``max_shuffle_rounds=None`` uses the
-    provably sufficient round bound; an explicit smaller cap raises
-    ``ShuffleExhaustedError`` if records remain undelivered (and when the
-    call is traced under an outer ``jax.jit`` — where that post-run check
-    cannot fire — an under-bound cap is refused at trace time unless
-    ``return_shuffle_stats=True`` puts the overflow counter in the
-    caller's hands). ``packed_shuffle`` selects the shuffle's exchange
-    implementation: ``None`` (auto, the default) uses the one-word packed
-    sort-once path whenever the padded site count fits in 24 bits and
-    ``num_weeks <= 64``, ``False`` forces the 4-column fallback, ``True``
-    demands packing (``ValueError`` if a field would not fit) — both are
-    bit-identical; only ``stats.bytes_exchanged`` and wall time differ
-    (see ``backends/mapreduce.py``). With
-    ``donate_log=True`` the log's buffers are donated to the computation
+    ``capacity_factor`` (multi-round residual exchange).
+    ``max_shuffle_rounds=None`` uses the provably sufficient round bound;
+    an explicit smaller cap raises ``ShuffleExhaustedError`` if records
+    remain undelivered (and when the call is traced under an outer
+    ``jax.jit`` — where that post-run check cannot fire — an under-bound
+    cap is refused at trace time unless ``return_shuffle_stats=True`` puts
+    the overflow counter in the caller's hands). With ``donate_log=True``
+    the log's buffers are donated to the computation
     (``jax.jit(..., donate_argnums=0)``) — the caller must not reuse the
     log afterwards on backends that honor donation (CPU ignores it with a
     warning). ``return_shuffle_stats=True`` returns
     ``(SpmResult, ShuffleStats)`` — the globally psum'd shuffle accounting
     for ``mapreduce``, ``None`` for the other backends (no record shuffle).
     """
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor,
+        max_shuffle_rounds=max_shuffle_rounds, packed_shuffle=packed_shuffle,
+        _caller="malstone_run")
     parts = _axis_size(mesh, axis_name)
     s_pad = _pad_sites(num_sites, parts)
-    hist_fn = histogram_fn or spm_lib.site_week_histogram
+    hist_fn, word_fn = resolve_histogram_fns(plan, histogram_fn)
+    hist_fn = hist_fn or spm_lib.site_week_histogram
 
     def local(log_shard: EventLog):
         hist, stats = _local_backend_histogram(
             log_shard, backend, s_pad, num_weeks, axis_name, hist_fn,
-            capacity_factor, max_shuffle_rounds, packed_shuffle)
+            plan, word_fn)
         return (hist, stats) if backend == "mapreduce" else hist
 
     spec = _log_pspec(log, axis_name)
@@ -247,8 +264,8 @@ def malstone_run(log: EventLog,
     stats = None
     if backend == "mapreduce":
         _check_round_cap_under_trace(
-            log, max_shuffle_rounds, return_shuffle_stats,
-            log.num_records // parts, parts, capacity_factor)
+            log, plan.max_shuffle_rounds, return_shuffle_stats,
+            log.num_records // parts, parts, plan.capacity_factor)
         hist, stats = jit_fn(log)
         _raise_if_exhausted(stats)
     else:
@@ -266,7 +283,8 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
                            num_chunks: Optional[int] = None,
                            num_weeks: int = WEEKS_PER_YEAR,
                            axis_name="data",
-                           capacity_factor: float = 2.0,
+                           plan: Optional[ExchangePlan] = None,
+                           capacity_factor: Optional[float] = None,
                            max_shuffle_rounds: Optional[int] = None,
                            packed_shuffle: Optional[bool] = None,
                            histogram_fn=None,
@@ -278,8 +296,9 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
     (the site x week histogram is a commutative monoid, so chunk
     accumulation is exact, and the ``mapreduce`` per-chunk shuffle is the
     same lossless multi-round residual loop as the one-shot path).
-    ``max_shuffle_rounds`` / ``return_shuffle_stats`` behave exactly as in
-    ``malstone_run``; streaming ``ShuffleStats`` counters accumulate over
+    ``plan`` / ``return_shuffle_stats`` behave exactly as in
+    ``malstone_run`` (legacy shuffle kwargs are deprecated aliases);
+    streaming ``ShuffleStats`` counters accumulate over
     chunks and ``rounds`` is the max any single chunk needed.
 
     Two modes, selected by the first argument:
@@ -299,13 +318,17 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
     )
     from repro.malgen.seeding import SeedInfo
 
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor,
+        max_shuffle_rounds=max_shuffle_rounds, packed_shuffle=packed_shuffle,
+        _caller="malstone_run_streaming")
     parts = _axis_size(mesh, axis_name)
     s_pad = _pad_sites(num_sites, parts)
     if backend == "mapreduce":
         # per-chunk shuffle: the capacity/round bound is set by chunk size
         _check_round_cap_under_trace(
-            seed_or_log, max_shuffle_rounds, return_shuffle_stats,
-            chunk_records, parts, capacity_factor)
+            seed_or_log, plan.max_shuffle_rounds, return_shuffle_stats,
+            chunk_records, parts, plan.capacity_factor)
 
     if isinstance(seed_or_log, SeedInfo):
         if cfg is None or num_chunks is None:
@@ -323,8 +346,7 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
                 seed, cfg, s_pad, chunks_per_device=cpd,
                 chunk_records=chunk_records, num_weeks=num_weeks,
                 axis_name=axis_name, backend=backend,
-                histogram_fn=histogram_fn, capacity_factor=capacity_factor,
-                max_rounds=max_shuffle_rounds, packed=packed_shuffle)
+                histogram_fn=histogram_fn, plan=plan)
 
         fn = shard_map(run_gen, mesh=mesh, in_specs=(), out_specs=out_specs,
                        check_vma=False)
@@ -339,8 +361,7 @@ def malstone_run_streaming(seed_or_log, num_sites: int, *,
             return streaming_histogram_from_log(
                 log_shard, s_pad, chunk_records=chunk_records,
                 num_weeks=num_weeks, axis_name=axis_name, backend=backend,
-                histogram_fn=histogram_fn, capacity_factor=capacity_factor,
-                max_rounds=max_shuffle_rounds, packed=packed_shuffle)
+                histogram_fn=histogram_fn, plan=plan)
 
         spec = _log_pspec(log, axis_name)
         fn = shard_map(run_log, mesh=mesh, in_specs=(spec,),
@@ -361,7 +382,8 @@ def malstone_run_generated(seed, cfg, *,
                            backend: str = "streams",
                            num_weeks: int = WEEKS_PER_YEAR,
                            axis_name="data",
-                           capacity_factor: float = 2.0,
+                           plan: Optional[ExchangePlan] = None,
+                           capacity_factor: Optional[float] = None,
                            max_shuffle_rounds: Optional[int] = None,
                            packed_shuffle: Optional[bool] = None,
                            histogram_fn=None,
@@ -376,15 +398,20 @@ def malstone_run_generated(seed, cfg, *,
     ``seed`` comes from ``make_seed(key, cfg, P * records_per_shard)`` and
     is closed over (its ``num_marked_events`` must stay a Python int —
     don't pass it through ``jax.jit`` arguments). ``num_sites`` defaults to
-    ``cfg.num_sites``; the shuffle keyword arguments behave exactly as in
-    ``malstone_run``.
+    ``cfg.num_sites``; ``plan`` (and the deprecated shuffle kwarg aliases)
+    behaves exactly as in ``malstone_run``.
     """
     from repro.malgen.generator import generate_shard_device
 
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor,
+        max_shuffle_rounds=max_shuffle_rounds, packed_shuffle=packed_shuffle,
+        _caller="malstone_run_generated")
     parts = _axis_size(mesh, axis_name)
     num_sites = num_sites or cfg.num_sites
     s_pad = _pad_sites(num_sites, parts)
-    hist_fn = histogram_fn or spm_lib.site_week_histogram
+    hist_fn, word_fn = resolve_histogram_fns(plan, histogram_fn)
+    hist_fn = hist_fn or spm_lib.site_week_histogram
 
     def local():
         sid = jax.lax.axis_index(axis_name)
@@ -392,16 +419,16 @@ def malstone_run_generated(seed, cfg, *,
                                       records_per_shard)
         return _local_backend_histogram(
             shard, backend, s_pad, num_weeks, axis_name, hist_fn,
-            capacity_factor, max_shuffle_rounds, packed_shuffle)
+            plan, word_fn)
 
     out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
     fn = shard_map(local, mesh=mesh, in_specs=(), out_specs=out_specs,
                    check_vma=False)
     hist, stats = jax.jit(fn)()
     if backend == "mapreduce":
-        _check_stats_or_refuse(stats, max_shuffle_rounds,
+        _check_stats_or_refuse(stats, plan.max_shuffle_rounds,
                                return_shuffle_stats, records_per_shard,
-                               parts, capacity_factor)
+                               parts, plan.capacity_factor)
     result = _finalize(hist[:num_sites], statistic)
     return (result, stats) if return_shuffle_stats else result
 
@@ -415,7 +442,8 @@ def malstone_run_generated_streaming(seed, cfg, *,
                                      backend: str = "streams",
                                      num_weeks: int = WEEKS_PER_YEAR,
                                      axis_name="data",
-                                     capacity_factor: float = 2.0,
+                                     plan: Optional[ExchangePlan] = None,
+                                     capacity_factor: Optional[float] = None,
                                      max_shuffle_rounds: Optional[int] = None,
                                      packed_shuffle: Optional[bool] = None,
                                      histogram_fn=None,
@@ -435,6 +463,10 @@ def malstone_run_generated_streaming(seed, cfg, *,
     from repro.core.streaming import streaming_histogram_from_log
     from repro.malgen.generator import generate_shard_device
 
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor,
+        max_shuffle_rounds=max_shuffle_rounds, packed_shuffle=packed_shuffle,
+        _caller="malstone_run_generated_streaming")
     parts = _axis_size(mesh, axis_name)
     num_sites = num_sites or cfg.num_sites
     s_pad = _pad_sites(num_sites, parts)
@@ -451,8 +483,7 @@ def malstone_run_generated_streaming(seed, cfg, *,
         return streaming_histogram_from_log(
             shard, s_pad, chunk_records=chunk_records, num_weeks=num_weeks,
             axis_name=axis_name, backend=backend, histogram_fn=histogram_fn,
-            capacity_factor=capacity_factor, max_rounds=max_shuffle_rounds,
-            packed=packed_shuffle)
+            plan=plan)
 
     out_specs = (P(), _STATS_SPEC if backend == "mapreduce" else None)
     fn = shard_map(local, mesh=mesh, in_specs=(), out_specs=out_specs,
@@ -460,9 +491,9 @@ def malstone_run_generated_streaming(seed, cfg, *,
     hist, stats = jax.jit(fn)()
     if backend == "mapreduce":
         # per-chunk shuffle: the capacity/round bound is set by chunk size
-        _check_stats_or_refuse(stats, max_shuffle_rounds,
+        _check_stats_or_refuse(stats, plan.max_shuffle_rounds,
                                return_shuffle_stats, chunk_records, parts,
-                               capacity_factor)
+                               plan.capacity_factor)
     result = _finalize(hist[:num_sites], statistic)
     return (result, stats) if return_shuffle_stats else result
 
@@ -472,27 +503,70 @@ def malstone_run_partitioned(log: EventLog,
                              *,
                              mesh: Mesh,
                              statistic: str = "B",
+                             backend: str = "sphere",
                              num_weeks: int = WEEKS_PER_YEAR,
-                             axis_name="data") -> SpmResult:
-    """Sphere-style production path: the result stays partitioned by site
-    block (device d owns sites [d*S/P, (d+1)*S/P)); nothing is re-broadcast.
+                             axis_name="data",
+                             plan: Optional[ExchangePlan] = None,
+                             capacity_factor: Optional[float] = None,
+                             max_shuffle_rounds: Optional[int] = None,
+                             packed_shuffle: Optional[bool] = None,
+                             histogram_fn=None,
+                             return_shuffle_stats: bool = False):
+    """Production path: the result stays partitioned by site block (device
+    d owns sites [d*S/P, (d+1)*S/P)); the finalized statistic is never
+    re-broadcast. Returns an SpmResult whose arrays are sharded over
+    ``axis_name`` on the site dimension.
 
-    Returns an SpmResult whose arrays are sharded over ``axis_name`` on the
-    site dimension.
+    Any backend works (``sphere``, the default, is the only one that also
+    avoids gathering the *histogram* — its ``psum_scatter`` dataflow is
+    already block-partitioned; the others compute the replicated histogram
+    and finalize only the owned block). ``plan`` and the lossless-shuffle
+    guards behave exactly as in ``malstone_run``:
+    ``return_shuffle_stats=True`` returns ``(SpmResult, ShuffleStats)``
+    and an under-bound explicit round cap is refused under a trace.
     """
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor,
+        max_shuffle_rounds=max_shuffle_rounds, packed_shuffle=packed_shuffle,
+        _caller="malstone_run_partitioned")
     parts = _axis_size(mesh, axis_name)
     s_pad = _pad_sites(num_sites, parts)
+    hist_fn, word_fn = resolve_histogram_fns(plan, histogram_fn)
+    hist_fn = hist_fn or spm_lib.site_week_histogram
+    block = s_pad // parts
 
-    def local(log_shard: EventLog) -> SpmResult:
-        owned = sphere_histogram(log_shard, s_pad, num_weeks, axis_name)
-        return _finalize(owned, statistic)
+    def local(log_shard: EventLog):
+        if backend == "sphere":
+            owned, stats = sphere_histogram(
+                log_shard, s_pad, num_weeks, axis_name,
+                histogram_fn=hist_fn), None
+        else:
+            hist, stats = _local_backend_histogram(
+                log_shard, backend, s_pad, num_weeks, axis_name, hist_fn,
+                plan, word_fn)
+            my = jax.lax.axis_index(axis_name)
+            owned = jax.lax.dynamic_slice_in_dim(hist, my * block, block)
+        result = _finalize(owned, statistic)
+        return (result, stats) if backend == "mapreduce" else result
 
     spec = _log_pspec(log, axis_name)
     out_spec = SpmResult(rho=P(axis_name), total=P(axis_name),
                          marked=P(axis_name))
-    fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=out_spec,
+    out_specs = ((out_spec, _STATS_SPEC) if backend == "mapreduce"
+                 else out_spec)
+    fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=out_specs,
                    check_vma=False)
-    return jax.jit(fn)(log)
+    jit_fn = jax.jit(fn)
+    stats = None
+    if backend == "mapreduce":
+        _check_round_cap_under_trace(
+            log, plan.max_shuffle_rounds, return_shuffle_stats,
+            log.num_records // parts, parts, plan.capacity_factor)
+        result, stats = jit_fn(log)
+        _raise_if_exhausted(stats)
+    else:
+        result = jit_fn(log)
+    return (result, stats) if return_shuffle_stats else result
 
 
 def malstone_lowerable(num_records_global: int, num_sites: int, *,
@@ -500,7 +574,8 @@ def malstone_lowerable(num_records_global: int, num_sites: int, *,
                        statistic: str = "B",
                        num_weeks: int = WEEKS_PER_YEAR,
                        axis_name=("data", "model"),
-                       capacity_factor: float = 1.5,
+                       plan: Optional[ExchangePlan] = None,
+                       capacity_factor: Optional[float] = None,
                        max_shuffle_rounds: Optional[int] = None,
                        packed_shuffle: Optional[bool] = None):
     """(fn, example_log_SDS) for dry-run lowering of the paper's workload.
@@ -519,6 +594,15 @@ def malstone_lowerable(num_records_global: int, num_sites: int, *,
     this path discards ``ShuffleStats``, so executing it on real skewed
     data would drop residual records with no error (use ``malstone_run``
     for anything that actually runs; it enforces the lossless contract)."""
+    if (plan is None and capacity_factor is None
+            and max_shuffle_rounds is None and packed_shuffle is None):
+        # dry-run analysis default: tighter buckets than the run drivers
+        plan = ExchangePlan(capacity_factor=1.5)
+    else:
+        plan = resolve_exchange_plan(
+            plan, capacity_factor=capacity_factor,
+            max_shuffle_rounds=max_shuffle_rounds,
+            packed_shuffle=packed_shuffle, _caller="malstone_lowerable")
     parts = _axis_size(mesh, axis_name)
     n = (num_records_global // parts) * parts
     s_pad = _pad_sites(num_sites, parts)
@@ -534,8 +618,8 @@ def malstone_lowerable(num_records_global: int, num_sites: int, *,
             elif backend == "mapreduce":
                 hist, _ = mapreduce_histogram(
                     log_shard, s_pad, num_weeks, axis_name,
-                    capacity_factor=capacity_factor,
-                    max_rounds=max_shuffle_rounds, packed=packed_shuffle)
+                    capacity_factor=plan.capacity_factor,
+                    max_rounds=plan.max_shuffle_rounds, impl=plan.impl)
             elif backend == "mapreduce_combiner":
                 hist = mapreduce_combiner_histogram(
                     log_shard, s_pad, num_weeks, axis_name)

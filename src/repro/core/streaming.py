@@ -46,7 +46,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.common.compat import axis_size
-from repro.common.types import EventLog, WEEKS_PER_YEAR
+from repro.common.types import (
+    EventLog,
+    ExchangePlan,
+    WEEKS_PER_YEAR,
+    resolve_exchange_plan,
+)
 from repro.core import spm as spm_lib
 from repro.core.backends import (
     ShuffleStats,
@@ -56,6 +61,7 @@ from repro.core.backends import (
     streams_histogram,  # noqa: F401
 )
 from repro.core.backends.mapreduce import mapreduce_combiner_histogram
+from repro.core.plan import resolve_histogram_fns
 from repro.malgen.generator import generate_chunk
 from repro.malgen.seeding import MalGenConfig, SeedInfo
 
@@ -139,9 +145,8 @@ def carry_partition_spec(backend: str, axis_name):
 
 def _accumulate_chunk(carry, chunk: EventLog, backend: str,
                       s_pad: int, num_weeks: int, axis_name,
-                      histogram_fn, capacity_factor: float,
-                      max_rounds: Optional[int],
-                      packed: Optional[bool] = None):
+                      histogram_fn, plan: ExchangePlan,
+                      word_histogram_fn=None):
     """Fold one chunk into the carry using the backend's dataflow."""
     if backend in ("streams", "sphere"):
         # local combine only; the cross-device collective runs post-scan
@@ -150,8 +155,9 @@ def _accumulate_chunk(carry, chunk: EventLog, backend: str,
         hist, stats = carry
         owned, chunk_stats = mapreduce_histogram(
             chunk, s_pad, num_weeks, axis_name,
-            capacity_factor=capacity_factor, histogram_fn=histogram_fn,
-            max_rounds=max_rounds, packed=packed)
+            capacity_factor=plan.capacity_factor, histogram_fn=histogram_fn,
+            max_rounds=plan.max_shuffle_rounds, impl=plan.impl,
+            word_histogram_fn=word_histogram_fn)
         return (hist + owned, _merge_stats(stats, chunk_stats))
     if backend == "mapreduce_combiner":
         owned = mapreduce_combiner_histogram(
@@ -164,7 +170,8 @@ def scan_chunk_range(carry, seed: SeedInfo, cfg: MalGenConfig,
                      first_chunk, num_chunks: int, chunk_records: int,
                      *, s_pad: int, num_weeks: int = WEEKS_PER_YEAR,
                      axis_name="data", backend: str = "streams",
-                     histogram_fn=None, capacity_factor: float = 2.0,
+                     histogram_fn=None, plan: Optional[ExchangePlan] = None,
+                     capacity_factor: Optional[float] = None,
                      max_rounds: Optional[int] = None,
                      packed: Optional[bool] = None):
     """Fold chunks ``[first_chunk, first_chunk + num_chunks)`` into
@@ -178,14 +185,21 @@ def scan_chunk_range(carry, seed: SeedInfo, cfg: MalGenConfig,
     *bit-identical* to one uninterrupted scan. ``first_chunk`` may be a
     traced int32 (``generate_chunk`` is a pure function of
     ``(seed, chunk_id)``).
+
+    ``plan`` is the unified :class:`~repro.common.types.ExchangePlan`;
+    ``capacity_factor`` / ``max_rounds`` / ``packed`` are deprecated aliases
+    that build one (and warn).
     """
-    hist_fn = histogram_fn or spm_lib.site_week_histogram
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor, max_shuffle_rounds=max_rounds,
+        packed_shuffle=packed, _caller="scan_chunk_range")
+    hist_fn, word_fn = resolve_histogram_fns(plan, histogram_fn)
+    hist_fn = hist_fn or spm_lib.site_week_histogram
 
     def step(c, i):
         chunk = generate_chunk(seed, cfg, first_chunk + i, chunk_records)
         return _accumulate_chunk(c, chunk, backend, s_pad, num_weeks,
-                                 axis_name, hist_fn, capacity_factor,
-                                 max_rounds, packed), None
+                                 axis_name, hist_fn, plan, word_fn), None
 
     carry, _ = jax.lax.scan(step, carry,
                             jnp.arange(num_chunks, dtype=jnp.int32))
@@ -222,7 +236,8 @@ def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
                                  axis_name="data",
                                  backend: str = "streams",
                                  histogram_fn=None,
-                                 capacity_factor: float = 2.0,
+                                 plan: Optional[ExchangePlan] = None,
+                                 capacity_factor: Optional[float] = None,
                                  max_rounds: Optional[int] = None,
                                  packed: Optional[bool] = None):
     """Chunked histogram over a materialized (per-device) log shard.
@@ -232,8 +247,16 @@ def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
     ``(histogram, shuffle_stats)``: the replicated ``[s_pad, num_weeks, 2]``
     histogram and, for the ``mapreduce`` backend, the chunk-accumulated
     global ``ShuffleStats`` (``None`` for every other backend).
+
+    ``plan`` is the unified :class:`~repro.common.types.ExchangePlan`;
+    ``capacity_factor`` / ``max_rounds`` / ``packed`` are deprecated aliases
+    that build one (and warn).
     """
-    hist_fn = histogram_fn or spm_lib.site_week_histogram
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor, max_shuffle_rounds=max_rounds,
+        packed_shuffle=packed, _caller="streaming_histogram_from_log")
+    hist_fn, word_fn = resolve_histogram_fns(plan, histogram_fn)
+    hist_fn = hist_fn or spm_lib.site_week_histogram
     n = log_shard.num_records
     if n % chunk_records != 0:
         raise ValueError(
@@ -249,8 +272,7 @@ def streaming_histogram_from_log(log_shard: EventLog, s_pad: int,
 
     def step(carry, chunk):
         return _accumulate_chunk(carry, chunk, backend, s_pad, num_weeks,
-                                 axis_name, hist_fn, capacity_factor,
-                                 max_rounds, packed), None
+                                 axis_name, hist_fn, plan, word_fn), None
 
     carry, _ = jax.lax.scan(
         step, _carry_init(backend, s_pad, num_weeks, axis_name), chunks)
@@ -265,7 +287,8 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
                                  axis_name="data",
                                  backend: str = "streams",
                                  histogram_fn=None,
-                                 capacity_factor: float = 2.0,
+                                 plan: Optional[ExchangePlan] = None,
+                                 capacity_factor: Optional[float] = None,
                                  max_rounds: Optional[int] = None,
                                  packed: Optional[bool] = None):
     """Generate-as-you-go chunked histogram: each scan step regenerates its
@@ -279,11 +302,13 @@ def streaming_histogram_generate(seed: SeedInfo, cfg: MalGenConfig,
     ``(histogram, shuffle_stats)`` exactly like
     ``streaming_histogram_from_log``.
     """
+    plan = resolve_exchange_plan(
+        plan, capacity_factor=capacity_factor, max_shuffle_rounds=max_rounds,
+        packed_shuffle=packed, _caller="streaming_histogram_generate")
     first_chunk = jax.lax.axis_index(axis_name) * chunks_per_device
     carry = scan_chunk_range(
         carry_init(backend, s_pad, num_weeks, axis_name), seed, cfg,
         first_chunk, chunks_per_device, chunk_records, s_pad=s_pad,
         num_weeks=num_weeks, axis_name=axis_name, backend=backend,
-        histogram_fn=histogram_fn, capacity_factor=capacity_factor,
-        max_rounds=max_rounds, packed=packed)
+        histogram_fn=histogram_fn, plan=plan)
     return post_scan_collective(carry, backend, s_pad, num_weeks, axis_name)

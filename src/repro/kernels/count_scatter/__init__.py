@@ -1,0 +1,3 @@
+from repro.kernels.count_scatter.ops import count_scatter
+
+__all__ = ["count_scatter"]

@@ -1,0 +1,141 @@
+"""Counting-sort scatter of packed shuffle words — Pallas TPU kernels.
+
+The MapReduce exchange needs its packed uint32 words in destination-
+contiguous stable order before the round loop (see ``ref.py`` for why
+stability makes this bit-identical to the argsort path). The destination
+key space is tiny — ``P`` devices plus one invalid pseudo-destination — so
+a counting sort does it in two O(n) record passes, each a Pallas kernel:
+
+1. ``_count_kernel``: per record tile, the ``[P+1]`` destination histogram
+   (one-hot compare + column sum on the VPU). A cheap jnp glue pass turns
+   the ``[n_tiles, P+1]`` table into exclusive prefix sums over
+   destinations (segment starts) and over tiles (each tile's write base
+   per destination) — O(tiles x P) work, negligible next to the record
+   passes.
+2. ``_scatter_kernel``: per record tile, place each word at
+   ``base[tile, dest] + rank-within-tile``. TPU has no per-lane scatter,
+   so the permutation is re-expressed as MXU matmuls: the within-tile
+   stable rank is a triangular comparison-count matmul (1D ``cumsum`` is
+   not vector-friendly on TPU), and the destination window is produced by
+   one-hot matmuls. f32 matmuls are only exact to 2^24, so the 32-bit word
+   is split into 16-bit halves — each half's one-hot product has exactly
+   one term <= 65535, exact in f32 — and recombined bitwise. Windows are
+   written with a dynamic-start read-modify-OR into the whole output
+   resident in VMEM: the grid is sequential on TPU, positions are unique,
+   and untouched lanes contribute zero, so OR-accumulation over the
+   zero-initialized buffer is exact.
+
+Memory plan: records stream through VMEM in ``[1, TR]`` blocks; the output
+(n words + one tile of slack so tail windows never go out of bounds) stays
+resident in VMEM across the whole grid, like ``segment_hist``'s histogram
+tile. The CPU container validates both kernels in interpret mode against
+``ref.py``; TPU is the target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned defaults (multiples of 128).
+RECORD_TILE = 1024   # TR: records per stream block
+DEST_LANES = 128     # the [P+1] histogram padded up to one lane group
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _count_kernel(dest_ref, out_ref, *, p_pad: int):
+    """out[0, d] = #{i in tile : dest[i] == d} for d in [0, p_pad)."""
+    dest = dest_ref[0, :]                                        # [TR] int32
+    d_iota = jax.lax.broadcasted_iota(jnp.int32, (dest.shape[0], p_pad), 1)
+    oh = jnp.where(dest[:, None] == d_iota, 1, 0)                # [TR, p_pad]
+    out_ref[0, :] = jnp.sum(oh, axis=0).astype(jnp.int32)
+
+
+def count_tiles_pallas(dest: jnp.ndarray, *, p_pad: int,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Per-tile destination histograms: int32 [n_tiles, p_pad].
+
+    ``dest`` is [n_tiles, record_tile] int32; padding rows must carry a
+    sentinel >= p_pad so they count nowhere.
+    """
+    n_tiles, record_tile = dest.shape
+    return pl.pallas_call(
+        functools.partial(_count_kernel, p_pad=p_pad),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, record_tile), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((1, p_pad), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, p_pad), jnp.int32),
+        interpret=interpret,
+    )(dest)
+
+
+def _scatter_kernel(dest_ref, lo_ref, hi_ref, base_ref, out_ref, *,
+                    num_dests: int, record_tile: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dest = dest_ref[0, :]                                        # [TR] int32
+    lo = lo_ref[0, :].astype(jnp.float32)                        # <= 65535
+    hi = hi_ref[0, :].astype(jnp.float32)
+    tr = record_tile
+    # strict upper-triangular counting matrix: tri[j, i] = 1 iff j < i
+    row_i = jax.lax.broadcasted_iota(jnp.int32, (tr, tr), 0)
+    col_i = jax.lax.broadcasted_iota(jnp.int32, (tr, tr), 1)
+    tri = jnp.where(row_i < col_i, 1.0, 0.0).astype(jnp.float32)
+    k_iota = jax.lax.broadcasted_iota(jnp.float32, (tr, tr), 1)
+
+    for d in range(num_dests):
+        m = dest == d
+        mf = jnp.where(m, 1.0, 0.0).astype(jnp.float32)
+        # within-tile stable rank r[i] = #{j < i : dest[j] == d} (exact:
+        # ranks < TR << 2^24)
+        r = jnp.dot(mf[None, :], tri,
+                    preferred_element_type=jnp.float32)[0]       # [TR]
+        # one-hot permutation oh[i, k] = (member i has rank k)
+        oh = jnp.where(m[:, None] & (r[:, None] == k_iota), 1.0, 0.0)
+        oh = oh.astype(jnp.float32)
+        c_lo = jnp.dot(lo[None, :], oh,
+                       preferred_element_type=jnp.float32)[0]    # [TR]
+        c_hi = jnp.dot(hi[None, :], oh,
+                       preferred_element_type=jnp.float32)[0]
+        window = (c_hi.astype(jnp.int32) << 16) | c_lo.astype(jnp.int32)
+        start = base_ref[0, d]
+        idx = (pl.ds(0, 1), pl.ds(start, tr))
+        pl.store(out_ref, idx, pl.load(out_ref, idx) | window[None, :])
+
+
+def scatter_tiles_pallas(dest: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                         base: jnp.ndarray, *, num_dests: int,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Scatter 16-bit word halves into destination-contiguous order.
+
+    ``dest``/``lo``/``hi`` are [n_tiles, record_tile]; ``base`` is
+    [n_tiles, p_pad] int32 with ``base[t, d]`` = the global output offset
+    of tile ``t``'s first record for destination ``d``. Returns int32
+    ``[1, n_tiles * record_tile + record_tile]`` (one tile of slack so the
+    last window's fixed-width write stays in bounds); callers slice and
+    bitcast.
+    """
+    n_tiles, record_tile = dest.shape
+    p_pad = base.shape[1]
+    out_len = n_tiles * record_tile + record_tile
+    rec_spec = pl.BlockSpec((1, record_tile), lambda t: (t, 0))
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, num_dests=num_dests,
+                          record_tile=record_tile),
+        grid=(n_tiles,),
+        in_specs=[rec_spec, rec_spec, rec_spec,
+                  pl.BlockSpec((1, p_pad), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((1, out_len), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, out_len), jnp.int32),
+        interpret=interpret,
+    )(dest, lo, hi, base)

@@ -1,0 +1,73 @@
+"""Public jit'd dispatch for the count_scatter counting sort.
+
+``impl="auto"`` runs the Pallas kernels on TPU and the jnp oracle
+(``ref.py`` — itself the measured CPU fast path) everywhere else; the
+kernel path is validated bit-exactly against the oracle in interpret mode
+by ``tests/test_counting_exchange.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.count_scatter.count_scatter import (
+    DEST_LANES,
+    RECORD_TILE,
+    _round_up,
+    count_tiles_pallas,
+    scatter_tiles_pallas,
+)
+from repro.kernels.count_scatter.ref import count_scatter_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_partitions", "impl", "record_tile", "interpret"))
+def count_scatter(words: jnp.ndarray, dest: jnp.ndarray, num_partitions: int,
+                  *, impl: str = "auto", record_tile: int = RECORD_TILE,
+                  interpret: bool | None = None):
+    """Stable counting sort of packed uint32 ``words`` by ``dest``.
+
+    ``dest`` is int32 in ``[0, num_partitions]`` (destination ``P`` = the
+    invalid-row pseudo-destination). Returns ``(words_sorted, starts)``,
+    bit-identical to ``jnp.argsort(dest, stable=True)`` + gather +
+    ``searchsorted`` — see ``ref.py``.
+
+    ``impl``: ``"jnp"`` = the oracle, ``"pallas"`` = the TPU kernels,
+    ``"auto"`` = pallas on TPU else jnp.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return count_scatter_ref(words, dest, num_partitions)
+    if impl != "pallas":
+        raise ValueError(f"impl must be 'auto', 'jnp' or 'pallas', got {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    n = words.shape[0]
+    p1 = num_partitions + 1
+    p_pad = _round_up(p1, DEST_LANES)
+    n_pad = _round_up(max(n, 1), record_tile)
+    # padding rows get a sentinel past every counted column
+    dest_t = jnp.pad(dest.astype(jnp.int32), (0, n_pad - n),
+                     constant_values=p_pad).reshape(-1, record_tile)
+    words_p = jnp.pad(words, (0, n_pad - n))
+
+    counts_t = count_tiles_pallas(dest_t, p_pad=p_pad,
+                                  interpret=interpret)    # [T, p_pad]
+    counts = jnp.sum(counts_t, axis=0)                    # [p_pad]
+    starts_full = jnp.cumsum(counts) - counts             # exclusive over d
+    tile_excl = jnp.cumsum(counts_t, axis=0) - counts_t   # exclusive over t
+    base = (starts_full[None, :] + tile_excl).astype(jnp.int32)
+
+    lo = (words_p & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    hi = (words_p >> jnp.uint32(16)).astype(jnp.int32)
+    out = scatter_tiles_pallas(
+        dest_t, lo.reshape(-1, record_tile), hi.reshape(-1, record_tile),
+        base, num_dests=p1, interpret=interpret)          # [1, n_pad + TR]
+    words_sorted = jax.lax.bitcast_convert_type(out[0, :n], jnp.uint32)
+    return words_sorted, starts_full[:p1].astype(jnp.int32)

@@ -17,6 +17,7 @@ from repro.common.types import EventLog, WEEKS_PER_YEAR
 from repro.kernels.segment_hist.segment_hist import (
     RECORD_TILE,
     SITE_TILE,
+    segment_hist_packed_pallas,
     segment_hist_pallas,
     _round_up,
 )
@@ -66,3 +67,42 @@ def segment_hist_eventlog(log: EventLog, num_sites: int,
     return segment_hist(
         log.site_id - site_offset, log.week(num_weeks=num_weeks), log.mark,
         valid, num_sites=num_sites, num_weeks=num_weeks, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_sites_local", "num_partitions", "num_weeks",
+                     "site_tile", "record_tile", "interpret"))
+def segment_hist_packed_words(words: jnp.ndarray, my_index: jnp.ndarray, *,
+                              num_sites_local: int, num_partitions: int,
+                              num_weeks: int = WEEKS_PER_YEAR,
+                              site_tile: int = SITE_TILE,
+                              record_tile: int = RECORD_TILE,
+                              interpret: bool = True) -> jnp.ndarray:
+    """The MapReduce reducer's fused unpack+histogram over packed words.
+
+    ``words`` is the flat uint32 stream the exchange delivered (invalid
+    slots are zero words) and ``my_index`` this device's mesh position
+    (``jax.lax.axis_index``); the kernel unpacks, ownership-filters
+    (``site % P == my``) and re-bases in one pass, so the unpacked columns
+    never exist. Returns the owned int32 ``[num_sites_local, num_weeks, 2]``
+    histogram block — bit-identical to unpack + ``segment_hist``.
+    """
+    n = words.shape[0]
+    n_pad = _round_up(max(n, 1), record_tile)
+    s_pad = _round_up(max(num_sites_local, 1), site_tile)
+    w_pad = max(64, _round_up(num_weeks, 64))
+
+    words_t = jax.lax.bitcast_convert_type(
+        jnp.pad(words.reshape(-1), (0, n_pad - n)), jnp.int32
+    ).reshape(n_pad // record_tile, record_tile)
+    my = jnp.asarray(my_index, jnp.int32).reshape(1, 1)
+
+    out = segment_hist_packed_pallas(
+        words_t, my, num_sites_padded=s_pad, num_weeks=num_weeks,
+        num_partitions=num_partitions, site_tile=site_tile,
+        record_tile=record_tile, interpret=interpret)
+
+    total = out[:num_sites_local, :num_weeks]
+    marked = out[:num_sites_local, w_pad:w_pad + num_weeks]
+    return jnp.stack([total, marked], axis=-1)

@@ -35,24 +35,12 @@ SITE_TILE = 256     # TS: sites per histogram tile
 RECORD_TILE = 1024  # TR: records per stream block
 
 
-def _kernel(site_ref, week_ref, mark_ref, valid_ref, out_ref, *,
-            mark_col_offset: int, w2_pad: int, site_tile: int):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    site = site_ref[0, :]                      # [TR] int32
-    week = week_ref[0, :]                      # [TR] int32
-    mark = mark_ref[0, :]                      # [TR] int32
-    valid = valid_ref[0, :]                    # [TR] int32 (0/1)
-
-    tile_start = pl.program_id(0) * site_tile
-    local = site - tile_start
-    in_tile = (local >= 0) & (local < site_tile) & (valid > 0)
-
-    tr = site.shape[0]
+def _accumulate(local, week, mark, in_tile, out_ref, *,
+                mark_col_offset: int, w2_pad: int, site_tile: int):
+    """Shared accumulate body: fold one record tile's (tile-local site,
+    week, mark, membership) into the VMEM-resident histogram tile via the
+    one-hot MXU matmul described in the module docstring."""
+    tr = local.shape[0]
     # one-hot site membership [TR, TS] — compare against a lane iota
     site_iota = jax.lax.broadcasted_iota(jnp.int32, (tr, site_tile), 1)
     oh_site = jnp.where(
@@ -73,6 +61,64 @@ def _kernel(site_ref, week_ref, mark_ref, valid_ref, out_ref, *,
         oh_site, rhs, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     out_ref[...] += partial.astype(jnp.int32)
+
+
+def _kernel(site_ref, week_ref, mark_ref, valid_ref, out_ref, *,
+            mark_col_offset: int, w2_pad: int, site_tile: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    site = site_ref[0, :]                      # [TR] int32
+    week = week_ref[0, :]                      # [TR] int32
+    mark = mark_ref[0, :]                      # [TR] int32
+    valid = valid_ref[0, :]                    # [TR] int32 (0/1)
+
+    tile_start = pl.program_id(0) * site_tile
+    local = site - tile_start
+    in_tile = (local >= 0) & (local < site_tile) & (valid > 0)
+    _accumulate(local, week, mark, in_tile, out_ref,
+                mark_col_offset=mark_col_offset, w2_pad=w2_pad,
+                site_tile=site_tile)
+
+
+def _packed_kernel(word_ref, my_ref, out_ref, *,
+                   mark_col_offset: int, w2_pad: int, site_tile: int,
+                   num_partitions: int):
+    """Fused unpack + histogram over packed shuffle words.
+
+    The MapReduce reducer's input is the stream of packed uint32 words the
+    exchange delivered (``repro.common.types`` layout: site<<8 | week<<2 |
+    mark<<1 | valid). Unpacking in-kernel — bit shifts on the VPU while the
+    words stream through VMEM — means the four int32 columns are never
+    materialized in HBM. The kernel also applies the reducer's ownership
+    filter (``site % P == my``) and re-bases strided site ids to the local
+    dense rows (``site // P``), so its output is directly the device's
+    owned histogram block. Words are int32 *bit patterns* (bitcast by
+    ops.py); masking after the arithmetic shift makes every field
+    extraction sign-safe.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    word = word_ref[0, :]                      # [TR] int32 bit pattern
+    my = my_ref[0, 0]
+
+    valid = (word & 1) > 0
+    mark = (word >> 1) & 1
+    week = (word >> 2) & 0x3F
+    site = (word >> 8) & 0xFFFFFF
+    ok = valid & ((site % num_partitions) == my)
+    local = site // num_partitions - pl.program_id(0) * site_tile
+    in_tile = ok & (local >= 0) & (local < site_tile)
+    _accumulate(local, week, mark, in_tile, out_ref,
+                mark_col_offset=mark_col_offset, w2_pad=w2_pad,
+                site_tile=site_tile)
 
 
 def segment_hist_pallas(site: jnp.ndarray, week: jnp.ndarray,
@@ -114,6 +160,40 @@ def segment_hist_pallas(site: jnp.ndarray, week: jnp.ndarray,
         interpret=interpret,
     )(site, week, mark, valid)
     return out
+
+
+def segment_hist_packed_pallas(words: jnp.ndarray, my_index: jnp.ndarray,
+                               num_sites_padded: int, num_weeks: int,
+                               num_partitions: int,
+                               *, site_tile: int = SITE_TILE,
+                               record_tile: int = RECORD_TILE,
+                               interpret: bool = False) -> jnp.ndarray:
+    """Raw fused-reducer entry (see ``_packed_kernel``). Preconditions
+    (ops.py enforces): ``words`` is [n_rec_tiles, record_tile] int32 bit
+    patterns with zero-word padding, ``my_index`` is [1, 1] int32, and
+    ``num_sites_padded % site_tile == 0`` counts *local* (per-device)
+    sites. Same output layout as ``segment_hist_pallas``.
+    """
+    n_rec_tiles, tr = words.shape
+    assert tr == record_tile, (tr, record_tile)
+    assert num_sites_padded % site_tile == 0
+    n_site_tiles = num_sites_padded // site_tile
+    w_pad = max(64, _round_up(num_weeks, 64))
+    w2_pad = 2 * w_pad
+
+    kernel = functools.partial(
+        _packed_kernel, mark_col_offset=w_pad, w2_pad=w2_pad,
+        site_tile=site_tile, num_partitions=num_partitions)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_site_tiles, n_rec_tiles),
+        in_specs=[pl.BlockSpec((1, record_tile), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((site_tile, w2_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_sites_padded, w2_pad), jnp.int32),
+        interpret=interpret,
+    )(words, my_index)
 
 
 def _round_up(x: int, m: int) -> int:

@@ -48,7 +48,8 @@ import jax
 
 from repro.bench import schema
 from repro.bench.timing import time_callable
-from repro.core import malstone_run, malstone_run_streaming
+from repro.common.types import ExchangePlan
+from repro.core import run as malstone
 from repro.malgen import MalGenConfig, generate_sharded_log, make_seed_streaming
 
 
@@ -74,15 +75,19 @@ def main():
                          " provably sufficient ceil(records/capacity) bound;"
                          " an explicit cap errors out rather than dropping"
                          " records if exhausted)")
+    ap.add_argument("--exchange-impl", default="auto",
+                    choices=("auto", "sort", "columns", "counting"),
+                    help="mapreduce shuffle exchange: 'counting' packs each"
+                         " record into one uint32 and orders it with a"
+                         " per-destination counting scatter (no sort at"
+                         " all); 'sort' packs and stable-argsorts once;"
+                         " 'columns' ships the four int32 columns; 'auto'"
+                         " uses counting whenever sites fit in 24 bits"
+                         " (bit-identical results either way)")
     ap.add_argument("--packed-shuffle", default="auto",
                     choices=("auto", "on", "off"),
-                    help="mapreduce shuffle exchange: 'on' packs each"
-                         " record into one uint32 (site/week/mark/valid)"
-                         " and sorts once before the round loop (~4x fewer"
-                         " shuffled bytes, no per-round argsort); 'off'"
-                         " ships the four int32 columns; 'auto' packs"
-                         " whenever sites fit in 24 bits (bit-identical"
-                         " results either way)")
+                    help="DEPRECATED alias of --exchange-impl: 'on' ="
+                         " --exchange-impl sort, 'off' = columns")
     ap.add_argument("--histogram-impl", default="segment_sum",
                     choices=("segment_sum", "pallas"),
                     help="local-combine histogram implementation: the"
@@ -131,18 +136,18 @@ def main():
     # residual exchange); surface its round/overflow accounting alongside
     # the timing so the capacity/rounds tradeoff is visible per run
     want_stats = args.backend == "mapreduce"
-    packed_shuffle = {"auto": None, "on": True, "off": False}[
-        args.packed_shuffle]
-    shuffle_kw = dict(capacity_factor=args.capacity_factor,
-                      max_shuffle_rounds=args.max_shuffle_rounds,
-                      packed_shuffle=packed_shuffle)
+    impl = args.exchange_impl
+    if args.packed_shuffle != "auto":
+        if impl != "auto":
+            ap.error("--packed-shuffle is a deprecated alias of"
+                     " --exchange-impl; pass only one of them")
+        impl = {"on": "sort", "off": "columns"}[args.packed_shuffle]
+        print(f"--packed-shuffle {args.packed_shuffle} is deprecated; "
+              f"use --exchange-impl {impl}")
+    plan = ExchangePlan(impl=impl, capacity_factor=args.capacity_factor,
+                        max_shuffle_rounds=args.max_shuffle_rounds,
+                        histogram_impl=args.histogram_impl)
     if args.histogram_impl == "pallas":
-        import functools
-
-        from repro.kernels.segment_hist.ops import segment_hist_eventlog
-        shuffle_kw["histogram_fn"] = functools.partial(
-            segment_hist_eventlog,
-            interpret=jax.default_backend() != "tpu")
         print("histogram: Pallas segment_hist kernel"
               + (" (interpret mode)" if jax.default_backend() != "tpu"
                  else ""))
@@ -160,13 +165,9 @@ def main():
         if args.gen_device:
             ap.error("--checkpoint-dir/--inject-faults are incompatible"
                      " with --gen-device")
-        return _run_resumable(ap, args, mesh, cfg, chunk, shuffle_kw)
+        return _run_resumable(ap, args, mesh, cfg, chunk, plan)
 
     if args.gen_device:
-        from repro.core import (
-            malstone_run_generated,
-            malstone_run_generated_streaming,
-        )
         from repro.malgen import make_seed
 
         mode = (f"fused + stream x{args.stream_chunks}" if args.stream_chunks
@@ -183,14 +184,15 @@ def main():
         def run_generated():
             # seed is closed over, not a jit argument: its static
             # num_marked_events defines the per-shard layout
-            kw = dict(mesh=mesh, records_per_shard=args.records_per_node,
+            kw = dict(mesh=mesh, cfg=cfg, plan=plan,
+                      records_per_shard=args.records_per_node,
                       statistic=args.statistic, backend=args.backend,
-                      return_shuffle_stats=want_stats, **shuffle_kw)
+                      return_shuffle_stats=want_stats)
             if args.stream_chunks:
-                out = malstone_run_generated_streaming(
-                    seed, cfg, chunk_records=chunk, **kw)
+                out = malstone(seed, engine="generated_streaming",
+                               chunk_records=chunk, **kw)
             else:
-                out = malstone_run_generated(seed, cfg, **kw)
+                out = malstone(seed, engine="generated", **kw)
             return (out[0].rho, out[1]) if want_stats else out.rho
 
         fn = jax.jit(run_generated)
@@ -208,11 +210,11 @@ def main():
               f"(scatter payload {seed.seed_bytes / 1e6:.1f} MB)")
 
         def run_stream(s):
-            out = malstone_run_streaming(
-                s, cfg.num_sites, mesh=mesh, backend=args.backend,
-                chunk_records=chunk, statistic=args.statistic, cfg=cfg,
-                num_chunks=num_chunks, return_shuffle_stats=want_stats,
-                **shuffle_kw)
+            out = malstone(
+                s, cfg.num_sites, mesh=mesh, engine="streaming", plan=plan,
+                backend=args.backend, chunk_records=chunk,
+                statistic=args.statistic, cfg=cfg, num_chunks=num_chunks,
+                return_shuffle_stats=want_stats)
             return (out[0].rho, out[1]) if want_stats else out.rho
 
         fn = jax.jit(run_stream)
@@ -227,10 +229,10 @@ def main():
         print(f"  generated in {time.perf_counter() - t0:.1f}s")
 
         def run_oneshot(l):
-            out = malstone_run(
-                l, cfg.num_sites, mesh=mesh, statistic=args.statistic,
-                backend=args.backend, return_shuffle_stats=want_stats,
-                **shuffle_kw)
+            out = malstone(
+                l, cfg.num_sites, mesh=mesh, plan=plan,
+                statistic=args.statistic, backend=args.backend,
+                return_shuffle_stats=want_stats)
             return (out[0].rho, out[1]) if want_stats else out.rho
 
         fn = jax.jit(run_oneshot)
@@ -259,15 +261,16 @@ def main():
                 f"shuffle exhausted --max-shuffle-rounds with "
                 f"{int(stats.overflow)} records undelivered")
         from repro.common.types import WEEKS_PER_YEAR
-        from repro.core.backends.mapreduce import resolve_packed_shuffle
+        from repro.core.backends import resolve_exchange_impl
         from repro.core.runner import _pad_sites
         # same static decision the shuffle itself makes: runner-padded
         # sites, the default week bucketing the drivers run at
-        packed_used = resolve_packed_shuffle(
-            packed_shuffle, _pad_sites(args.sites, args.nodes),
-            WEEKS_PER_YEAR)
+        impl_used = resolve_exchange_impl(
+            plan.impl, _pad_sites(args.sites, args.nodes), WEEKS_PER_YEAR)
+        packed_used = impl_used != "columns"
         shuffle_derived = {
             "capacity_factor": args.capacity_factor,
+            "shuffle_impl": impl_used,
             "shuffle_packed": packed_used,
             "shuffle_rounds": int(stats.rounds),
             "shuffle_capacity": int(stats.capacity),
@@ -277,6 +280,7 @@ def main():
             "shuffle_bytes_exchanged": int(stats.bytes_exchanged),
         }
         print(f"  shuffle: {'packed' if packed_used else 'unpacked'} "
+              f"impl={impl_used} "
               f"rounds={shuffle_derived['shuffle_rounds']} "
               f"capacity={shuffle_derived['shuffle_capacity']}/dest "
               f"deferred={shuffle_derived['shuffle_deferred']} "
@@ -301,6 +305,7 @@ def main():
              "sites": args.sites, "entities": args.entities,
              "stream_chunks": args.stream_chunks,
              "capacity_factor": args.capacity_factor,
+             "exchange_impl": args.exchange_impl,
              "packed_shuffle": args.packed_shuffle,
              "histogram_impl": args.histogram_impl},
             timing, records=total, derived=shuffle_derived)
@@ -308,7 +313,7 @@ def main():
         print(f"wrote {out}")
 
 
-def _run_resumable(ap, args, mesh, cfg, chunk, shuffle_kw):
+def _run_resumable(ap, args, mesh, cfg, chunk, exchange_plan):
     """The --checkpoint-dir / --inject-faults path: one segment-at-a-time
     run through ``repro.core.resume`` (bit-identical to the uninterrupted
     streaming engine), wall-clocked once — re-running it under the shared
@@ -340,7 +345,7 @@ def _run_resumable(ap, args, mesh, cfg, chunk, shuffle_kw):
     runner = ResumableRunner(
         seed, cfg, mesh=mesh, num_chunks=num_chunks, chunk_records=chunk,
         segment_chunks=seg, backend=args.backend, statistic=args.statistic,
-        **shuffle_kw)
+        plan=exchange_plan)
     t0 = time.perf_counter()
     out = runner.run(checkpoint_dir=args.checkpoint_dir, resume=args.resume,
                      faults=plan,
@@ -390,7 +395,8 @@ def _run_resumable(ap, args, mesh, cfg, chunk, shuffle_kw):
              "stream_chunks": args.stream_chunks, "segment_chunks": seg,
              "resume": args.resume,
              "inject_faults": args.inject_faults or "",
-             "capacity_factor": args.capacity_factor},
+             "capacity_factor": args.capacity_factor,
+             "exchange_impl": args.exchange_impl},
             timing, records=rep.chunks_processed * chunk, derived=derived)
         path = schema.write_document(doc, path=args.bench_json)
         print(f"wrote {path}")
